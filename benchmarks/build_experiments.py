@@ -1,0 +1,68 @@
+"""Render EXPERIMENTS.md table sections from the dry-run JSONs.
+Usage: PYTHONPATH=src python -m benchmarks.build_experiments
+Prints the §Dry-run and §Roofline tables to stdout (pasted into
+EXPERIMENTS.md by the build process / maintainer)."""
+from __future__ import annotations
+
+import json
+
+
+def fmt(results, mesh_filter):
+    rows = []
+    for r in results:
+        if r.get("status") == "SKIP":
+            continue
+        if r.get("status") != "OK":
+            rows.append(f"| {r['arch']} | {r['shape']} | - | FAIL: "
+                        f"{r.get('error','?')[:40]} | | | | | | |")
+            continue
+        is_multi = "pod" in r["mesh"]
+        if (mesh_filter == "multi") != is_multi:
+            continue
+        ro, mem = r["roofline"], r["memory"]
+        flags = []
+        if r.get("fsdp"):
+            flags.append("fsdp")
+        if r.get("seq_parallel"):
+            flags.append("sp")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {'+'.join(flags) or '-'} "
+            f"| {ro['compute_s']:.3f} | {ro['memory_s']:.3f} "
+            f"| {ro['collective_s']:.3f} | {ro['dominant']} "
+            f"| {ro['useful_ratio']:.2f} | {ro['roofline_fraction']:.4f} "
+            f"| {mem['peak_gb']:.2f}{'' if mem['fits_16gb'] else ' (!)'} |")
+    head = ("| arch | shape | mode | compute_s | memory_s | collective_s "
+            "| dominant | useful | frac | peak GB/dev |\n"
+            "|---|---|---|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def main():
+    with open("dryrun_results.json") as f:
+        results = json.load(f)
+    ok = [r for r in results if r.get("status") == "OK"]
+    fail = [r for r in results if r.get("status") == "FAIL"]
+    skip = [r for r in results if r.get("status") == "SKIP"]
+    print(f"<!-- {len(ok)} OK, {len(fail)} FAIL, {len(skip)} SKIP -->\n")
+    print("### Single-pod (16x16 = 256 chips)\n")
+    print(fmt(results, "single"))
+    print("\n### Multi-pod (2x16x16 = 512 chips)\n")
+    print(fmt(results, "multi"))
+    print("\n### Skipped cells\n")
+    print("| arch | shape | reason |\n|---|---|---|")
+    for r in skip:
+        print(f"| {r['arch']} | {r['shape']} | {r['reason'][:90]}... |")
+    try:
+        with open("dryrun_hier.json") as f:
+            hier = json.load(f)
+        print("\n### HierTrain tiered sync (multi-pod, train_4k)\n")
+        print(fmt(hier, "multi"))
+        for r in hier:
+            if r.get("status") == "OK" and "tiers" in r:
+                print(f"\n- {r['arch']}: {r['tiers']}")
+    except FileNotFoundError:
+        pass
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Shared benchmark plumbing: the paper's testbed profiles + bandwidth
+sweeps (§VI-B) and a tiny CSV/markdown table printer."""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Sequence
+
+from repro.core.cost_model import HierProfile, Network
+from repro.core.profiler import (ALEXNET_TESTBED, PAPER_TESTBED,
+                                 analytic_profile)
+from repro.models.cnn import alexnet, lenet5
+
+MBPS = 1e6 / 8.0                      # paper quotes Mbps; model uses B/s
+
+# §VI-D: mobile-edge fixed at 5 Mbps; edge-cloud swept 1.5 -> 5 Mbps.
+EDGE_CLOUD_SWEEP_MBPS = (1.5, 2.0, 2.5, 3.0, 3.5, 4.0, 4.5, 5.0)
+MOBILE_EDGE_MBPS = 5.0
+
+BATCH = {"lenet5": 128, "alexnet": 64}
+
+# Per-model worker calibration — the paper's profiling stage measures each
+# model on each worker, so effective throughput is model-specific.
+TESTBEDS = {"lenet5": PAPER_TESTBED, "alexnet": ALEXNET_TESTBED}
+
+
+def paper_profile(model_name: str) -> HierProfile:
+    model = {"lenet5": lenet5, "alexnet": alexnet}[model_name]()
+    return analytic_profile(model, TESTBEDS[model_name])
+
+
+def network(edge_cloud_mbps: float,
+            mobile_edge_mbps: float = MOBILE_EDGE_MBPS) -> Network:
+    return Network(bw_de=mobile_edge_mbps * MBPS,
+                   bw_ec=edge_cloud_mbps * MBPS)
+
+
+def table(rows: Sequence[Dict], cols: Sequence[str],
+          title: str = "") -> str:
+    out: List[str] = []
+    if title:
+        out.append(f"### {title}")
+    out.append("| " + " | ".join(cols) + " |")
+    out.append("|" + "|".join("---" for _ in cols) + "|")
+    for r in rows:
+        out.append("| " + " | ".join(
+            f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
+            for c in cols) + " |")
+    return "\n".join(out)

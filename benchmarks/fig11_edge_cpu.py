@@ -1,0 +1,37 @@
+"""Fig. 11: effect of edge-server CPU count on HierTrain, AlexNet.
+The paper scales the edge server from 1 to 4 cores (docker-limited);
+here the edge worker's throughput scales with core count.  Expected
+shape: big win 1->2 cores at low bandwidth, flat at high bandwidth
+(optimal policy trains on the cloud)."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import BATCH, network, table
+from repro.core.profiler import ALEXNET_TESTBED, analytic_profile
+from repro.core.scheduler import solve
+from repro.models.cnn import alexnet
+
+BWS = (1.0, 1.5, 2.0, 3.0, 4.0)
+
+
+def run() -> str:
+    rows = []
+    model = alexnet()
+    for cores in (1, 2, 3, 4):
+        workers = dict(ALEXNET_TESTBED)
+        base = workers["edge"]
+        workers["edge"] = dataclasses.replace(
+            base, flops_per_sec=base.flops_per_sec * cores)
+        profile = analytic_profile(model, workers)
+        row = {"edge_cores": cores}
+        for bw in BWS:
+            row[f"bw{bw}"] = solve(profile, network(bw),
+                                   BATCH["alexnet"]).t_total
+        rows.append(row)
+    return table(rows, ["edge_cores"] + [f"bw{b}" for b in BWS],
+                 "Fig.11 — per-iteration time (s) vs edge cores, AlexNet")
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,45 @@
+"""Figs. 7/8: per-iteration training time of HierTrain vs All-Edge and
+All-Cloud across the edge-cloud bandwidth sweep, for AlexNet (Fig. 7)
+and LeNet-5 (Fig. 8).  The paper reports up to 2.3x/4.5x (AlexNet) and
+1.7x/6.9x (LeNet-5) speedups over All-Edge/All-Cloud."""
+from __future__ import annotations
+
+from benchmarks.common import (BATCH, EDGE_CLOUD_SWEEP_MBPS, network,
+                               paper_profile, table)
+from repro.core.baselines import all_on_one
+from repro.core.scheduler import solve
+
+
+def run_model(model_name: str) -> tuple:
+    profile = paper_profile(model_name)
+    B = BATCH[model_name]
+    rows = []
+    best_edge, best_cloud = 0.0, 0.0
+    for bw in EDGE_CLOUD_SWEEP_MBPS:
+        net = network(bw)
+        hier = solve(profile, net, B).t_total
+        edge = all_on_one(profile, net, B, "edge").t_total
+        cloud = all_on_one(profile, net, B, "cloud").t_total
+        best_edge = max(best_edge, edge / hier)
+        best_cloud = max(best_cloud, cloud / hier)
+        rows.append({"edge_cloud_mbps": bw, "hiertrain_s": hier,
+                     "all_edge_s": edge, "all_cloud_s": cloud,
+                     "speedup_vs_edge": edge / hier,
+                     "speedup_vs_cloud": cloud / hier})
+    return rows, best_edge, best_cloud
+
+
+def run() -> str:
+    out = []
+    for name, fig in (("alexnet", "Fig.7"), ("lenet5", "Fig.8")):
+        rows, se, sc = run_model(name)
+        out.append(table(
+            rows, ["edge_cloud_mbps", "hiertrain_s", "all_edge_s",
+                   "all_cloud_s", "speedup_vs_edge", "speedup_vs_cloud"],
+            f"{fig} — {name} (B={BATCH[name]}); max speedup "
+            f"{se:.1f}x vs All-Edge, {sc:.1f}x vs All-Cloud"))
+    return "\n\n".join(out)
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,42 @@
+"""Figs. 9/10: HierTrain vs JointDNN, JointDNN+ and JALAD (8-bit
+compression) across the bandwidth sweep, AlexNet and LeNet-5.
+
+Expected qualitative shape (paper §VI-D.3): JALAD wins below ~2 Mbps on
+AlexNet (compression dominates), HierTrain wins everywhere else; on
+LeNet-5 the JALAD/JointDNN+ curves collapse onto All-Edge/All-Cloud."""
+from __future__ import annotations
+
+from benchmarks.common import (BATCH, EDGE_CLOUD_SWEEP_MBPS, network,
+                               paper_profile, table)
+from repro.core.baselines import jalad, jointdnn, jointdnn_plus
+from repro.core.scheduler import solve
+
+
+def run_model(model_name: str) -> list:
+    profile = paper_profile(model_name)
+    B = BATCH[model_name]
+    rows = []
+    for bw in EDGE_CLOUD_SWEEP_MBPS:
+        net = network(bw)
+        rows.append({
+            "edge_cloud_mbps": bw,
+            "hiertrain_s": solve(profile, net, B).t_total,
+            "jointdnn_s": jointdnn(profile, net, B).t_total,
+            "jointdnn+_s": jointdnn_plus(profile, net, B).t_total,
+            "jalad_s": jalad(profile, net, B).t_total,
+        })
+    return rows
+
+
+def run() -> str:
+    out = []
+    for name, fig in (("alexnet", "Fig.9"), ("lenet5", "Fig.10")):
+        rows = run_model(name)
+        out.append(table(rows, ["edge_cloud_mbps", "hiertrain_s",
+                                "jointdnn_s", "jointdnn+_s", "jalad_s"],
+                         f"{fig} — {name} vs JointDNN/JointDNN+/JALAD"))
+    return "\n\n".join(out)
+
+
+if __name__ == "__main__":
+    print(run())

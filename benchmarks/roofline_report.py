@@ -1,0 +1,68 @@
+"""§Roofline report: renders the dry-run JSON (written by
+``repro.launch.dryrun --out``) as the per-(arch x shape) roofline table
+for EXPERIMENTS.md.  Pure post-processing — no jax device state, so it
+can run inside the normal 1-device benchmark process."""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+from benchmarks.common import table
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..",
+                       "dryrun_results.json")
+
+
+def run(path: str = RESULTS, mesh_filter: str = "single") -> str:
+    if not os.path.exists(path):
+        return ("(dry-run results not found — run `python -m "
+                "repro.launch.dryrun --mesh both --out "
+                "dryrun_results.json` first)")
+    with open(path) as f:
+        results = json.load(f)
+    rows: List[dict] = []
+    skips: List[dict] = []
+    for r in results:
+        if r.get("status") == "SKIP":
+            skips.append({"arch": r["arch"], "shape": r["shape"],
+                          "reason": r["reason"][:60] + "..."})
+            continue
+        if r.get("status") != "OK":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": "?", "dominant": "FAIL",
+                         "compute_s": float("nan"),
+                         "memory_s": float("nan"),
+                         "collective_s": float("nan"),
+                         "useful": float("nan"), "peak_gb": float("nan"),
+                         "frac": float("nan")})
+            continue
+        is_multi = "pod" in r["mesh"]
+        if mesh_filter == "single" and is_multi:
+            continue
+        if mesh_filter == "multi" and not is_multi:
+            continue
+        roof = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "mesh": "x".join(str(v) for v in r["mesh"].values()),
+            "compute_s": roof["compute_s"], "memory_s": roof["memory_s"],
+            "collective_s": roof["collective_s"],
+            "dominant": roof["dominant"],
+            "useful": roof["useful_ratio"],
+            "frac": roof["roofline_fraction"],
+            "peak_gb": r["memory"]["peak_gb"],
+        })
+    out = [table(rows, ["arch", "shape", "mesh", "compute_s", "memory_s",
+                        "collective_s", "dominant", "useful", "frac",
+                        "peak_gb"],
+                 f"Roofline terms per (arch x shape), {mesh_filter}-pod "
+                 "mesh")]
+    if skips:
+        out.append(table(skips, ["arch", "shape", "reason"],
+                         "Skipped cells"))
+    return "\n\n".join(out)
+
+
+if __name__ == "__main__":
+    print(run())

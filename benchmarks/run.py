@@ -1,0 +1,37 @@
+"""Benchmark orchestrator: one section per paper table/figure, plus the
+roofline report if dry-run results exist.  ``python -m benchmarks.run``."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig6_model_validity, fig7_8_speedup,
+                            fig9_10_sota, fig11_edge_cpu, roofline_report,
+                            table2_sched_runtime)
+    sections = [
+        ("Fig.6 model validity", fig6_model_validity.run),
+        ("Fig.7/8 vs All-Edge/All-Cloud", fig7_8_speedup.run),
+        ("Fig.9/10 vs JointDNN/JointDNN+/JALAD", fig9_10_sota.run),
+        ("Fig.11 edge CPU scaling", fig11_edge_cpu.run),
+        ("Table II scheduler runtime", table2_sched_runtime.run),
+        ("Roofline report (from dry-run)", roofline_report.run),
+    ]
+    failures = 0
+    for name, fn in sections:
+        t0 = time.perf_counter()
+        print(f"\n{'='*72}\n== {name}\n{'='*72}")
+        try:
+            print(fn())
+            print(f"-- done in {time.perf_counter() - t0:.1f}s")
+        except Exception as e:                      # pragma: no cover
+            failures += 1
+            import traceback
+            traceback.print_exc()
+            print(f"-- FAILED: {e}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

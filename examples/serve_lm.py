@@ -1,0 +1,58 @@
+"""Batched serving example: prefill a prompt batch, decode new tokens
+with the KV cache, report per-phase throughput.  ``--arch`` selects any
+assigned architecture's *smoke* config (same code path as the full
+configs; the 32k/500k cells run via the dry-run).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen2.5-3b --new 32
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.models.lm.model import build_model
+from repro.serve.engine import generate
+
+ARGS = None
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    cfg = spec.smoke
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    B, T = args.batch, args.prompt_len
+    batch = {"tokens": jax.random.randint(key, (B, T), 0, cfg.vocab)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(key, (B, T, cfg.d_model),
+                                            jnp.float32)
+    elif cfg.n_frontend_tokens > 0:
+        P = cfg.n_frontend_tokens
+        batch["tokens"] = batch["tokens"][:, :T - P]
+        batch["embeds"] = jax.random.normal(key, (B, P, cfg.d_model),
+                                            jnp.float32)
+
+    t0 = time.perf_counter()
+    out = generate(model, params, batch, max_len=T + args.new,
+                   n_new=args.new, key=key, temperature=args.temperature)
+    out.tokens.block_until_ready()
+    dt = time.perf_counter() - t0
+    print(f"arch={args.arch} (smoke config, family={cfg.family})")
+    print(f"generated {B}x{args.new} tokens in {dt:.2f}s "
+          f"({B*args.new/dt:.1f} tok/s incl. prefill+compile)")
+    print("sample token ids:", out.tokens[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,218 @@
+"""HierTrain per-iteration training-time cost model — Eqs. (1)-(12) of the paper.
+
+Conventions
+-----------
+* Physical workers are ``"device"``, ``"edge"``, ``"cloud"`` (indices 0/1/2).
+* Roles are ``o`` (TASK O, full model, owner), ``s`` (TASK S, layers 1..m_s),
+  ``l`` (TASK L, layers 1..m_l), with ``0 <= m_s <= m_l <= N``.
+* Layers are 1-indexed in the paper; arrays here are 0-indexed, so layer ``i``
+  lives at index ``i-1``.  ``MO[i-1]`` is the forward output size (bytes per
+  sample) of layer ``i``; ``MP[i-1]`` its parameter bytes.
+* All times in seconds, sizes in bytes, bandwidths in bytes/second.
+
+The device↔cloud path is the series composition of the device↔edge and
+edge↔cloud links (data is relayed through the edge — Fig. 1(c) topology); the
+paper's Algorithm 1 only takes ``BW_de`` and ``BW_ec`` as inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+WORKERS: Tuple[str, str, str] = ("device", "edge", "cloud")
+WIDX: Dict[str, int] = {w: i for i, w in enumerate(WORKERS)}
+
+
+@dataclasses.dataclass
+class HierProfile:
+    """Profiling-stage output (§III, profiling stage).
+
+    Attributes
+    ----------
+    L_f, L_b : ``[3, N]`` — forward/backward seconds *per sample* per layer
+        per worker (``L^f_{j,i}``, ``L^b_{j,i}``).
+    L_u : ``[3, N]`` — weight-update seconds per layer per worker
+        (``L^u_{j,i}``; batch-size independent).
+    MP : ``[N]`` — parameter bytes per layer (``MP_i``).
+    MO : ``[N]`` — forward-output bytes per *sample* per layer (``MO_i``).
+    sample_bytes : ``Q`` — bytes of one training sample (input + label).
+    """
+    layer_names: Tuple[str, ...]
+    L_f: np.ndarray
+    L_b: np.ndarray
+    L_u: np.ndarray
+    MP: np.ndarray
+    MO: np.ndarray
+    sample_bytes: float
+
+    def __post_init__(self) -> None:
+        self.L_f = np.asarray(self.L_f, np.float64)
+        self.L_b = np.asarray(self.L_b, np.float64)
+        self.L_u = np.asarray(self.L_u, np.float64)
+        self.MP = np.asarray(self.MP, np.float64)
+        self.MO = np.asarray(self.MO, np.float64)
+        n = self.num_layers
+        assert self.L_f.shape == (3, n) and self.L_b.shape == (3, n)
+        assert self.L_u.shape == (3, n) and self.MP.shape == (n,)
+        assert self.MO.shape == (n,)
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layer_names)
+
+    # Prefix sums (index k => layers 1..k inclusive) used all over the
+    # scheduler; computed lazily and cached.
+    def prefix(self) -> Dict[str, np.ndarray]:
+        if not hasattr(self, "_prefix"):
+            z = np.zeros((3, 1))
+            zl = np.zeros(1)
+            self._prefix = {
+                "F": np.concatenate([z, np.cumsum(self.L_f, axis=1)], axis=1),
+                "Bk": np.concatenate([z, np.cumsum(self.L_b, axis=1)], axis=1),
+                "U": np.concatenate([z, np.cumsum(self.L_u, axis=1)], axis=1),
+                "MP": np.concatenate([zl, np.cumsum(self.MP)]),
+            }
+        return self._prefix
+
+
+@dataclasses.dataclass
+class Network:
+    """Bandwidths (bytes/s). ``bw_de``: device↔edge; ``bw_ec``: edge↔cloud."""
+    bw_de: float
+    bw_ec: float
+
+    def bw(self, a: str, b: str) -> float:
+        if a == b:
+            return np.inf
+        pair = frozenset((a, b))
+        if pair == frozenset(("device", "edge")):
+            return self.bw_de
+        if pair == frozenset(("edge", "cloud")):
+            return self.bw_ec
+        # device <-> cloud: store-and-forward through the edge.
+        return 1.0 / (1.0 / self.bw_de + 1.0 / self.bw_ec)
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """A full HierTrain scheduling decision (mapping + cuts + batch split)."""
+    worker_o: str
+    worker_s: str
+    worker_l: str
+    m_s: int
+    m_l: int
+    b_o: int
+    b_s: int
+    b_l: int
+
+    @property
+    def batch(self) -> int:
+        return self.b_o + self.b_s + self.b_l
+
+    def role_of(self, worker: str) -> Optional[str]:
+        for role, w in (("o", self.worker_o), ("s", self.worker_s),
+                        ("l", self.worker_l)):
+            if w == worker:
+                return role
+        return None
+
+    def describe(self) -> str:
+        return (f"o={self.worker_o}(b={self.b_o}) "
+                f"s={self.worker_s}(m={self.m_s},b={self.b_s}) "
+                f"l={self.worker_l}(m={self.m_l},b={self.b_l})")
+
+
+@dataclasses.dataclass
+class Breakdown:
+    """Per-phase latencies of one training iteration — Eq. (12) terms."""
+    t_f1: float
+    t_b1: float
+    t_f2: float
+    t_b2: float
+    t_f3: float
+    t_b3: float
+    t_update: float
+    # Diagnostics (not part of T_total; already contained in the above):
+    comm_input: float = 0.0
+    comm_activation: float = 0.0
+    comm_weightgrad: float = 0.0
+
+    @property
+    def total(self) -> float:
+        return (self.t_f1 + self.t_b1 + self.t_f2 + self.t_b2 +
+                self.t_f3 + self.t_b3 + self.t_update)
+
+
+def t_input(profile: HierProfile, net: Network, worker: str, b: int,
+            origin: str = "device") -> float:
+    """``T_{j,input}``: latency for worker *j* to receive its ``b`` samples."""
+    if b == 0 or worker == origin:
+        return 0.0
+    return b * profile.sample_bytes / net.bw(origin, worker)
+
+
+def t_total(profile: HierProfile, net: Network, sched: Schedule,
+            origin: str = "device") -> Breakdown:
+    """Exact Eq. (12) evaluation for an (integer) schedule."""
+    N = profile.num_layers
+    assert 0 <= sched.m_s <= sched.m_l <= N, "need 0 <= m_s <= m_l <= N"
+    if sched.m_s == 0:
+        assert sched.b_s == 0, "m_s = 0 forces b_s = 0 (constraint (14))"
+    if sched.m_l == 0:
+        assert sched.b_l == 0, "m_l = 0 forces b_l = 0 (constraint (15))"
+    p = profile.prefix()
+    F, Bk, U, MPc = p["F"], p["Bk"], p["U"], p["MP"]
+    o, s, l = WIDX[sched.worker_o], WIDX[sched.worker_s], WIDX[sched.worker_l]
+    ms, ml = sched.m_s, sched.m_l
+    bo, bs, bl = sched.b_o, sched.b_s, sched.b_l
+
+    bw_os = net.bw(sched.worker_o, sched.worker_s)
+    bw_ol = net.bw(sched.worker_o, sched.worker_l)
+
+    # --- communication pieces -------------------------------------------
+    t_in_o = t_input(profile, net, sched.worker_o, bo, origin)
+    t_in_s = t_input(profile, net, sched.worker_s, bs, origin)
+    t_in_l = t_input(profile, net, sched.worker_l, bl, origin)
+    # T_{s,output} = b_s * MO_{m_s} / B_{o,s}; T_{s,grad} equals it.  (§IV-C)
+    t_s_out = bs * profile.MO[ms - 1] / bw_os if (ms > 0 and bs > 0) else 0.0
+    t_l_out = bl * profile.MO[ml - 1] / bw_ol if (ml > 0 and bl > 0) else 0.0
+
+    # --- Eq. (5)/(6): layers 1..m_s on all three workers ----------------
+    t_f1 = max(t_in_o + bo * F[o, ms],
+               t_in_s + bs * F[s, ms] + t_s_out,
+               t_in_l + bl * F[l, ms])
+    t_b1 = max(bo * Bk[o, ms],
+               bs * Bk[s, ms] + t_s_out,
+               bl * Bk[l, ms])
+
+    # --- Eq. (7)/(8): layers m_s+1..m_l on worker_o (b_o+b_s) & worker_l -
+    t_f2 = max((bo + bs) * (F[o, ml] - F[o, ms]),
+               bl * (F[l, ml] - F[l, ms]) + t_l_out)
+    t_b2 = max((bo + bs) * (Bk[o, ml] - Bk[o, ms]),
+               bl * (Bk[l, ml] - Bk[l, ms]) + t_l_out)
+
+    # --- Eq. (9)/(10): layers m_l+1..N on worker_o with the full batch ---
+    B = bo + bs + bl
+    t_f3 = B * (F[o, N] - F[o, ml])
+    t_b3 = B * (Bk[o, N] - Bk[o, ml])
+
+    # --- Eq. (11): weight update -----------------------------------------
+    # worker_o updates all N layers (TASK O is the full model); worker_s
+    # updates 1..m_s; worker_l updates 1..m_l.  Gradient exchange covers the
+    # *shared* (frontend) layers only: 2 * sum MP_i (push grads + pull avg).
+    t_upd_o = U[o, N]
+    t_upd_s = U[s, ms] if bs > 0 else 0.0
+    t_upd_l = U[l, ml] if bl > 0 else 0.0
+    t_wg_s = 2.0 * MPc[ms] / bw_os if bs > 0 else 0.0
+    t_wg_l = 2.0 * MPc[ml] / bw_ol if bl > 0 else 0.0
+    t_update = max(t_upd_o, t_upd_s, t_upd_l) + max(t_wg_s, t_wg_l)
+
+    return Breakdown(
+        t_f1=t_f1, t_b1=t_b1, t_f2=t_f2, t_b2=t_b2, t_f3=t_f3, t_b3=t_b3,
+        t_update=t_update,
+        comm_input=t_in_o + t_in_s + t_in_l,
+        comm_activation=2.0 * (t_s_out + t_l_out),
+        comm_weightgrad=max(t_wg_s, t_wg_l),
+    )

@@ -1,0 +1,159 @@
+"""Hybrid-parallelism execution engine (§IV-B) with exact SGD semantics.
+
+Executes one HierTrain iteration the way the paper describes it — three
+workers holding *separate copies* of their assigned layers, activations
+crossing at the cut points, and only frontend gradients being exchanged —
+and produces the *same* update as vanilla SGD over the full batch ``B``
+(sample-weighted gradient averaging; see DESIGN.md §3 for why weighting is
+required for exactness).
+
+The forward routing (Fig. 4):
+
+* ``worker_s``: layers ``1..m_s`` on its ``b_s`` samples -> ships ``h_s``.
+* ``worker_l``: layers ``1..m_l`` on its ``b_l`` samples -> ships ``h_l``.
+* ``worker_o``: layers ``1..m_s`` on ``b_o``; layers ``m_s+1..m_l`` on its own
+  activations *plus the arrived* ``h_s``; layers ``m_l+1..N`` on everything.
+
+The backward pass retraces this routing (handled by AD through the composed
+function — gradients w.r.t. ``params_s`` are exactly what worker_s computes
+after receiving the intermediate result at layer ``m_s+1``).  Weight update:
+per-layer gradient exchange over the *shared* frontend only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cost_model import Schedule
+from repro.models.cnn import LayeredModel
+
+Params = List[Dict[str, jax.Array]]
+
+
+def _sum_nll(model: LayeredModel, logits: jax.Array,
+             labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.sum(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def reference_sgd_step(model: LayeredModel, params: Params, x: jax.Array,
+                       y: jax.Array, lr: float) -> Tuple[Params, jax.Array]:
+    """Vanilla full-batch SGD step: the ground truth the hybrid step must
+    reproduce."""
+    def loss_fn(p):
+        return _sum_nll(model, model.apply(p, x), y) / x.shape[0]
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+    return new, loss
+
+
+def split_batch(x: jax.Array, y: jax.Array, sched: Schedule
+                ) -> Dict[str, Tuple[jax.Array, jax.Array]]:
+    """Assign the first b_o samples to o, next b_s to s, rest to l."""
+    bo, bs, bl = sched.b_o, sched.b_s, sched.b_l
+    assert bo + bs + bl == x.shape[0]
+    return {
+        "o": (x[:bo], y[:bo]),
+        "s": (x[bo:bo + bs], y[bo:bo + bs]),
+        "l": (x[bo + bs:], y[bo + bs:]),
+    }
+
+
+def hybrid_sgd_step(model: LayeredModel, params: Params,
+                    batches: Dict[str, Tuple[jax.Array, jax.Array]],
+                    m_s: int, m_l: int, lr: float
+                    ) -> Tuple[Params, jax.Array]:
+    """One HierTrain iteration.  Returns (updated params, mean loss).
+
+    ``params`` plays the role of the consensus weights each worker starts
+    the iteration with (they are equal after every weight-update phase).
+    """
+    N = model.num_layers
+    assert 0 <= m_s <= m_l <= N
+    x_o, y_o = batches["o"]
+    x_s, y_s = batches["s"]
+    x_l, y_l = batches["l"]
+    b_o, b_s, b_l = x_o.shape[0], x_s.shape[0], x_l.shape[0]
+    B = b_o + b_s + b_l
+
+    # Worker-local copies: p_s = frontend 1..m_s, p_l = 1..m_l, p_o = all.
+    p_o = params
+    p_s = params[:m_s]
+    p_l = params[:m_l]
+
+    def iteration_loss(p_o: Params, p_s: Params, p_l: Params) -> jax.Array:
+        # --- forward phase (Fig. 4 routing) ---
+        h_s = model.apply_segment(p_s, x_s, 0, m_s) if b_s else None
+        h_l = model.apply_segment(p_l, x_l, 0, m_l) if b_l else None
+        a_o = model.apply_segment(p_o, x_o, 0, m_s)
+        # worker_o continues its own + s's samples through m_s+1..m_l.
+        mid_in = a_o if h_s is None else jnp.concatenate([a_o, h_s], axis=0)
+        mid = model.apply_segment(p_o, mid_in, m_s, m_l)
+        tail_in = mid if h_l is None else jnp.concatenate([mid, h_l], axis=0)
+        logits = model.apply_segment(p_o, tail_in, m_l, N)
+        labels = jnp.concatenate([y_o, y_s, y_l], axis=0)
+        return _sum_nll(model, logits, labels)
+
+    total_loss, (g_o, g_s, g_l) = jax.value_and_grad(
+        iteration_loss, argnums=(0, 1, 2))(p_o, p_s, p_l)
+
+    # --- weight-update phase: layer-wise gradient exchange ---------------
+    # Workers hold per-sample-sum gradients; worker_o aggregates the shared
+    # frontend layers and every worker scales by 1/B (exact batch-B SGD).
+    new_params: Params = []
+    for i in range(N):
+        g = g_o[i]
+        if i < m_s and b_s:
+            g = jax.tree.map(jnp.add, g, g_s[i])
+        if i < m_l and b_l:
+            g = jax.tree.map(jnp.add, g, g_l[i])
+        new_params.append(jax.tree.map(
+            lambda p, gg: p - lr * (gg / B), params[i], g))
+    return new_params, total_loss / B
+
+
+def hybrid_step_from_schedule(model: LayeredModel, params: Params,
+                              x: jax.Array, y: jax.Array, sched: Schedule,
+                              lr: float) -> Tuple[Params, jax.Array]:
+    return hybrid_sgd_step(model, params, split_batch(x, y, sched),
+                           sched.m_s, sched.m_l, lr)
+
+
+# ---------------------------------------------------------------------------
+# Communication accounting: bytes each phase moves across worker boundaries.
+# Used by integration tests to confirm the hybrid step's traffic equals the
+# cost model's DataSize terms (the other half of model validity).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrafficReport:
+    input_bytes: float
+    activation_bytes: float   # forward handoff + backward intermediate
+    weightgrad_bytes: float   # frontend grads up + averaged grads down
+
+    @property
+    def total(self) -> float:
+        return self.input_bytes + self.activation_bytes + \
+            self.weightgrad_bytes
+
+
+def traffic(model: LayeredModel, sched: Schedule, sample_bytes: float,
+            origin: str = "device") -> TrafficReport:
+    metas = model.layer_meta()
+    inp = sum(b * sample_bytes for b, w in
+              ((sched.b_o, sched.worker_o), (sched.b_s, sched.worker_s),
+               (sched.b_l, sched.worker_l)) if w != origin)
+    act = 0.0
+    if sched.m_s > 0 and sched.b_s > 0 and sched.worker_s != sched.worker_o:
+        act += 2.0 * sched.b_s * metas[sched.m_s - 1].out_bytes
+    if sched.m_l > 0 and sched.b_l > 0 and sched.worker_l != sched.worker_o:
+        act += 2.0 * sched.b_l * metas[sched.m_l - 1].out_bytes
+    wg = 0.0
+    if sched.b_s > 0 and sched.worker_s != sched.worker_o:
+        wg += 2.0 * sum(m.param_bytes for m in metas[:sched.m_s])
+    if sched.b_l > 0 and sched.worker_l != sched.worker_o:
+        wg += 2.0 * sum(m.param_bytes for m in metas[:sched.m_l])
+    return TrafficReport(inp, act, wg)

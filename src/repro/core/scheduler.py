@@ -1,0 +1,150 @@
+"""Algorithm 1 of the paper: optimal HierTrain scheduling policy.
+
+For every one of the 6 worker-role mappings and every cut pair
+``(m_s, m_l)`` with ``0 <= m_s <= m_l <= N``, problem P1 (Eqs. 16-19) with the
+cuts fixed is an ILP.  Per §V we relax it to an LP in epigraph form (one
+epigraph variable per max-term of Eq. 12), solve with the two-phase simplex in
+:mod:`repro.core.lp`, round with the paper's largest-fraction rule, and keep
+the schedule with the smallest *exact* integer-evaluated ``T_total``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import lp as lp_mod
+from repro.core.cost_model import (WIDX, WORKERS, Breakdown, HierProfile,
+                                   Network, Schedule, t_total)
+
+
+@dataclasses.dataclass
+class SchedulerResult:
+    schedule: Schedule
+    breakdown: Breakdown
+    t_total: float
+    n_lp_solved: int
+    search_log: List[Tuple[Schedule, float]]
+
+
+def _round_batch_split(b_real: np.ndarray, B: int,
+                       allowed: np.ndarray) -> np.ndarray:
+    """Paper §V rounding: floor everything, then hand the missing units to the
+    entries with the largest fractional parts (at most two steps).  Entries
+    with ``allowed == False`` (their ``m`` is 0) never receive extra units.
+    """
+    b_real = np.clip(np.asarray(b_real, np.float64), 0.0, None)
+    ints = np.floor(b_real + 1e-9).astype(np.int64)
+    fracs = b_real - ints
+    fracs = np.where(allowed, fracs, -1.0)  # never bump disallowed entries
+    deficit = int(B - ints.sum())
+    order = np.argsort(-fracs)
+    out = ints.copy()
+    for j in range(len(out)):
+        if deficit <= 0:
+            break
+        idx = order[j]
+        if not allowed[idx] and idx != 0:
+            continue
+        out[idx] += 1
+        deficit -= 1
+    # Degenerate LP numerics: dump any remainder on b_o (always allowed).
+    if deficit > 0:
+        out[0] += deficit
+    if deficit < 0:  # floor overshoot cannot happen, but stay safe
+        out[0] += deficit
+    return out
+
+
+def _solve_cut_lp(profile: HierProfile, net: Network, wo: str, ws: str,
+                  wl: str, m_s: int, m_l: int, B: int,
+                  origin: str) -> Optional[np.ndarray]:
+    """LP relaxation of P1 for a fixed mapping and fixed cuts.
+
+    Variables ``x = [b_o, b_s, b_l, t1, t2, t3, t4] >= 0`` where
+    ``t1 >= T^1_fwd``-terms, ``t2 >= T^1_bwd``, ``t3 >= T^2_fwd``,
+    ``t4 >= T^2_bwd``.  ``T^3`` and ``T_update`` are constant once the cuts
+    are fixed (they involve the full batch ``B`` / only prefix parameter
+    sums), so they do not enter the LP objective.
+    """
+    p = profile.prefix()
+    F, Bk = p["F"], p["Bk"]
+    o, s, l = WIDX[wo], WIDX[ws], WIDX[wl]
+    Q = profile.sample_bytes
+    bw_os, bw_ol = net.bw(wo, ws), net.bw(wo, wl)
+    in_o = 0.0 if wo == origin else Q / net.bw(origin, wo)
+    in_s = 0.0 if ws == origin else Q / net.bw(origin, ws)
+    in_l = 0.0 if wl == origin else Q / net.bw(origin, wl)
+    mo_s = profile.MO[m_s - 1] / bw_os if m_s > 0 else 0.0
+    mo_l = profile.MO[m_l - 1] / bw_ol if m_l > 0 else 0.0
+
+    nv = 7
+    c = np.array([0, 0, 0, 1, 1, 1, 1], np.float64)
+    A_ub, b_ub = [], []
+
+    def ub(coef_b, t_idx):  # coef_b @ [b_o,b_s,b_l] - t <= 0
+        row = np.zeros(nv)
+        row[:3] = coef_b
+        row[3 + t_idx] = -1.0
+        A_ub.append(row)
+        b_ub.append(0.0)
+
+    # t1 >= each arm of Eq. (5); t2 >= each arm of Eq. (6).
+    ub([in_o + F[o, m_s], 0, 0], 0)
+    ub([0, in_s + F[s, m_s] + mo_s, 0], 0)
+    ub([0, 0, in_l + F[l, m_s]], 0)
+    ub([Bk[o, m_s], 0, 0], 1)
+    ub([0, Bk[s, m_s] + mo_s, 0], 1)
+    ub([0, 0, Bk[l, m_s]], 1)
+    # t3 >= each arm of Eq. (7); t4 >= each arm of Eq. (8).
+    ub([F[o, m_l] - F[o, m_s], F[o, m_l] - F[o, m_s], 0], 2)
+    ub([0, 0, (F[l, m_l] - F[l, m_s]) + mo_l], 2)
+    ub([Bk[o, m_l] - Bk[o, m_s], Bk[o, m_l] - Bk[o, m_s], 0], 3)
+    ub([0, 0, (Bk[l, m_l] - Bk[l, m_s]) + mo_l], 3)
+    # Constraints (14)/(15): b_s <= m_s*B, b_l <= m_l*B.
+    row = np.zeros(nv); row[1] = 1.0
+    A_ub.append(row); b_ub.append(float(m_s) * B)
+    row = np.zeros(nv); row[2] = 1.0
+    A_ub.append(row); b_ub.append(float(m_l) * B)
+    # Constraint (17): b_o + b_s + b_l = B.
+    A_eq = np.zeros((1, nv)); A_eq[0, :3] = 1.0
+    b_eq = np.array([float(B)])
+
+    res = lp_mod.linprog(c, np.array(A_ub), np.array(b_ub), A_eq, b_eq)
+    if not res.success:
+        return None
+    return res.x[:3]
+
+
+def solve(profile: HierProfile, net: Network, B: int,
+          origin: str = "device",
+          workers: Tuple[str, ...] = WORKERS,
+          keep_log: bool = False) -> SchedulerResult:
+    """Algorithm 1: enumerate mappings x cuts, LP + round, return the best."""
+    N = profile.num_layers
+    best: Optional[Tuple[Schedule, Breakdown]] = None
+    n_lp = 0
+    log: List[Tuple[Schedule, float]] = []
+    for wo, ws, wl in itertools.permutations(workers, 3):
+        for m_s in range(0, N + 1):
+            for m_l in range(m_s, N + 1):
+                n_lp += 1
+                b = _solve_cut_lp(profile, net, wo, ws, wl, m_s, m_l, B,
+                                  origin)
+                if b is None:
+                    continue
+                allowed = np.array([True, m_s > 0, m_l > 0])
+                b_int = _round_batch_split(b, B, allowed)
+                sched = Schedule(wo, ws, wl, m_s, m_l,
+                                 int(b_int[0]), int(b_int[1]), int(b_int[2]))
+                bd = t_total(profile, net, sched, origin)
+                if keep_log:
+                    log.append((sched, bd.total))
+                if best is None or bd.total < best[1].total:
+                    best = (sched, bd)
+    assert best is not None
+    return SchedulerResult(schedule=best[0], breakdown=best[1],
+                           t_total=best[1].total, n_lp_solved=n_lp,
+                           search_log=log)

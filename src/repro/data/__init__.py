@@ -1,0 +1,4 @@
+from repro.data.pipeline import (SyntheticImages, SyntheticTokens,
+                                 make_lm_batch_fn)
+
+__all__ = ["SyntheticImages", "SyntheticTokens", "make_lm_batch_fn"]

@@ -1,0 +1,11 @@
+from repro.distrib.sharding import (batch_shardings, batch_spec,
+                                    cache_shardings, cache_spec, dp_axes,
+                                    opt_state_shardings, param_shardings,
+                                    param_spec, replicated)
+from repro.distrib.tiered_sync import (TierAssignment, choose_tiers,
+                                       dcn_bytes_per_step, tiered_grad_sync)
+
+__all__ = ["batch_shardings", "batch_spec", "cache_shardings", "cache_spec",
+           "dp_axes", "opt_state_shardings", "param_shardings", "param_spec",
+           "replicated", "TierAssignment", "choose_tiers",
+           "dcn_bytes_per_step", "tiered_grad_sync"]

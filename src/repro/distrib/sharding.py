@@ -1,0 +1,203 @@
+"""Named-sharding rules for params, optimizer state, batches and caches.
+
+Axes: ``pod`` (inter-pod DCN — the HierTrain "WAN"), ``data`` (intra-pod
+DP/FSDP), ``model`` (intra-pod TP).  Rules are shape-driven with
+divisibility fallbacks so every assigned architecture lowers on the
+16x16 and 2x16x16 meshes without per-arch special cases:
+
+* weights (ndim >= 2): last dim -> ``model`` (TP), second-to-last ->
+  ``data`` (FSDP / ZeRO-3: params gathered on use, grads reduce-
+  scattered by XLA's SPMD partitioner).  Layer-stacked leaves
+  ``[L, in, out]`` shard ``in``/``out`` the same way; the stack dim
+  stays unsharded (it is scanned over).
+* batches: leading dim over ``(pod, data)`` when divisible, else
+  ``data`` only, else replicated (long_500k's global_batch=1).
+* KV caches: batch over DP axes; KV-head dim over ``model`` when
+  divisible, else the *sequence* dim over ``model`` (MQA/GQA with few
+  KV heads — granite's kv=1 — becomes sequence-sharded decode attention;
+  the LSE combine falls out of XLA's reduction handling).
+* recurrent states: batch over DP; first state dim divisible by
+  ``model`` gets TP (zamba's 112 SSD heads, xlstm's 512-wide head dim).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+Tree = Any
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def batch_spec(mesh: Mesh, batch: int, ndim: int) -> P:
+    """Leading-dim data-parallel spec with divisibility fallback."""
+    axes = dp_axes(mesh)
+    prod = int(np.prod([_axis_size(mesh, a) for a in axes]))
+    rest = (None,) * (ndim - 1)
+    if axes and batch % prod == 0:
+        return P(axes, *rest)
+    if "data" in axes and batch % _axis_size(mesh, "data") == 0:
+        return P("data", *rest)
+    return P(*((None,) * ndim))
+
+
+def batch_shardings(mesh: Mesh, batch_shapes: Tree) -> Tree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, batch_spec(mesh, s.shape[0],
+                                                 len(s.shape))),
+        batch_shapes)
+
+
+def param_spec(mesh: Mesh, shape: Tuple[int, ...], fsdp: bool = True) -> P:
+    """TP (``model``) on the largest shardable dim, FSDP (``data``) on the
+    largest remaining one.  For ``[L, ...]`` layer-stacked leaves the scan
+    dim is excluded.  Putting TP on the larger of (in, out) keeps the
+    contraction sharding Megatron-shaped for both halves of an MLP
+    (w_in: out-dim TP -> sharded activations; w_out: in-dim TP -> one
+    psum per block) instead of sharding a contraction over ``data``.
+
+    ``fsdp=False`` replicates params over ``data`` (TP-only): for models
+    whose per-device state fits HBM this removes the per-microbatch
+    weight re-gather entirely (§Perf iteration 1)."""
+    model = _axis_size(mesh, "model")
+    data = _axis_size(mesh, "data")
+    ndim = len(shape)
+    if ndim < 2:
+        return P()
+    spec: list = [None] * ndim
+    start = 1 if ndim >= 3 else 0          # skip the layer-stack dim
+    dims = sorted(range(start, ndim), key=lambda i: -shape[i])
+    for i in dims:
+        if "model" in mesh.axis_names and shape[i] % model == 0 and \
+                shape[i] >= model:
+            spec[i] = "model"
+            dims.remove(i)
+            break
+    if fsdp:
+        for i in dims:
+            if "data" in mesh.axis_names and shape[i] % data == 0 and \
+                    shape[i] >= data:
+                spec[i] = "data"
+                break
+    return P(*spec)
+
+
+def fsdp_needed(mesh: Mesh, total_params: int, opt_bytes_per_param: int,
+                budget_bytes: float = 8e9) -> bool:
+    """TP-only state = (2 + opt) bytes/param over the model axis; use
+    FSDP only when that exceeds the per-device budget."""
+    model = _axis_size(mesh, "model")
+    per_dev = total_params * (2 + opt_bytes_per_param) / model
+    return per_dev > budget_bytes
+
+
+# Megatron column/row assignment by leaf name: column-parallel weights
+# shard their OUTPUT dim (no communication on use — the producer's input
+# is replicated), row-parallel weights shard their INPUT dim (one psum of
+# the block output).  Shape-only rules put TP on wk/wv's contraction dim,
+# which costs a psum per use (measured 2304 all-reduces/step on
+# qwen2.5-3b train_4k — §Perf iteration 2).
+_COLUMN_PARALLEL = {"wq", "wk", "wv", "w_gate", "w_up", "up_proj",
+                    "in_proj", "w_in", "b_up", "bq", "bk", "bv", "lm_head",
+                    "r", "w_gates", "router", "conv_w", "conv_b"}
+_ROW_PARALLEL = {"wo", "w_down", "down_proj", "out_proj"}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        key = getattr(entry, "key", None)
+        if isinstance(key, str):
+            return key
+    return ""
+
+
+def param_spec_named(mesh: Mesh, name: str, shape: Tuple[int, ...],
+                     fsdp: bool = True) -> P:
+    model = _axis_size(mesh, "model")
+    data = _axis_size(mesh, "data")
+    ndim = len(shape)
+    if ndim < 2:
+        return P()
+    tp_dim = None
+    if name in _COLUMN_PARALLEL and shape[-1] % model == 0 and \
+            shape[-1] >= model:
+        tp_dim = ndim - 1
+    elif name in _ROW_PARALLEL and shape[-2] % model == 0 and \
+            shape[-2] >= model:
+        tp_dim = ndim - 2
+    if tp_dim is None:
+        return param_spec(mesh, shape, fsdp)
+    spec: list = [None] * ndim
+    if "model" in mesh.axis_names:
+        spec[tp_dim] = "model"
+    if fsdp and "data" in mesh.axis_names:
+        start = 1 if ndim >= 3 else 0
+        for i in sorted(range(start, ndim), key=lambda i: -shape[i]):
+            if i != tp_dim and shape[i] % data == 0 and shape[i] >= data:
+                spec[i] = "data"
+                break
+    return P(*spec)
+
+
+def param_shardings(mesh: Mesh, param_shapes: Tree,
+                    fsdp: bool = True) -> Tree:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, s: NamedSharding(
+            mesh, param_spec_named(mesh, _leaf_name(path), s.shape, fsdp)),
+        param_shapes)
+
+
+def opt_state_shardings(mesh: Mesh, state_shapes: Tree,
+                        fsdp: bool = True) -> Tree:
+    """Optimizer state mirrors parameter sharding leaf-for-leaf (scalars —
+    the step counter — stay replicated)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, s: NamedSharding(
+            mesh, param_spec_named(mesh, _leaf_name(path), s.shape, fsdp)),
+        state_shapes)
+
+
+def cache_spec(mesh: Mesh, shape: Tuple[int, ...], batch: int) -> P:
+    """Decode-state sharding.  Layout conventions from the model zoo:
+    ``[L, B, S, KV, hd]`` attention caches, ``[L, B, ...state]``
+    recurrent states, ``[L, B, K-1, C]`` conv states."""
+    model = _axis_size(mesh, "model")
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    if ndim < 2:
+        return P()
+    # axis 1 is batch for every cache in the zoo.
+    bspec = batch_spec(mesh, shape[1], 1)
+    spec[1] = bspec[0] if len(bspec) else None
+    if "model" in mesh.axis_names and ndim >= 3:
+        if ndim == 5 and shape[3] % model == 0 and shape[3] >= model:
+            spec[3] = "model"          # KV heads / SSD heads
+        elif ndim == 5 and shape[2] % model == 0:
+            spec[2] = "model"          # sequence-sharded KV (MQA)
+        else:
+            # first divisible trailing dim gets TP
+            for ax in range(ndim - 1, 1, -1):
+                if shape[ax] % model == 0 and shape[ax] >= model:
+                    spec[ax] = "model"
+                    break
+    return P(*spec)
+
+
+def cache_shardings(mesh: Mesh, cache_shapes: Tree, batch: int) -> Tree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, cache_spec(mesh, s.shape, batch)),
+        cache_shapes)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,128 @@
+"""Chunked gated-linear-recurrence kernel (Pallas TPU) — the SSD/mLSTM
+primitive shared by Mamba2 and xLSTM.
+
+Contract (matches ``repro.models.lm.gla.chunked_gla``)::
+
+    S_t = exp(a_t) S_{t-1} + k_t^T v_t
+    n_t = exp(a_t) n_{t-1} + k_t
+    y_t = q_t S_t  [/ max(|q_t n_t|, 1)]
+
+Grid is ``(B*H, T/W)`` — the chunk axis is the TPU's sequential minor
+grid axis, so the running ``[dk, dv]`` state and ``[1, dk]`` normalizer
+live in VMEM scratch across chunks.  Within a chunk everything is a
+``W x W`` / ``W x dk`` / ``W x dv`` matmul (MXU-shaped); the recurrence
+only crosses chunks, which is exactly the paper-recommended TPU
+adaptation of a GPU sequential-scan kernel: quadratic *inside* the VMEM
+tile, linear *across* tiles.
+
+VMEM working set per step (f32): ``W*dk*2 + W*dv*2 + 3*W*W + dk*dv``
+— for W=128, dk=dv=128 that is ~0.5 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gla_kernel(q_ref, k_ref, v_ref, a_ref, y_ref, s_out_ref, n_out_ref,
+                S_scr, n_scr, *, normalize: bool, nc: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        S_scr[...] = jnp.zeros_like(S_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+
+    q = q_ref[0].astype(jnp.float32)          # [W, dk]
+    k = k_ref[0].astype(jnp.float32)          # [W, dk]
+    v = v_ref[0].astype(jnp.float32)          # [W, dv]
+    a = a_ref[0].astype(jnp.float32)          # [W, LANES] (col 0 real)
+
+    ca = jnp.cumsum(a[:, :1], axis=0)         # [W, 1] inclusive cumsum
+    tot = ca[-1:, :]                          # [1, 1]
+    W = q.shape[0]
+
+    # --- intra-chunk quadratic term -----------------------------------
+    rel = ca - ca.T                           # [W, W] = ca_i - ca_j
+    causal = jax.lax.broadcasted_iota(jnp.int32, (W, W), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (W, W), 1)
+    D = jnp.where(causal, jnp.exp(rel), 0.0)
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * D
+    y = jax.lax.dot(scores, v)                # [W, dv]
+
+    # --- cross-chunk term via carried state ----------------------------
+    S_in = S_scr[...]                         # [dk, dv]
+    n_in = n_scr[...]                         # [1, dk] (first row real)
+    q_dec = q * jnp.exp(ca)                   # [W, dk]
+    y = y + jax.lax.dot(q_dec, S_in)
+
+    if normalize:
+        denom = jax.lax.dot(scores, jnp.ones((W, 1), jnp.float32))
+        denom = denom + jax.lax.dot_general(
+            q_dec, n_in, (((1,), (1,)), ((), ())))      # [W, 1]
+        y = y / jnp.maximum(jnp.abs(denom), 1.0)
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # --- state update ---------------------------------------------------
+    kd = k * jnp.exp(tot - ca)                # [W, dk]
+    S_new = jnp.exp(tot) * S_in + jax.lax.dot_general(
+        kd, v, (((0,), (0,)), ((), ())))      # [dk, dv]
+    n_new = jnp.exp(tot) * n_in + jnp.sum(kd, axis=0, keepdims=True)
+    S_scr[...] = S_new
+    n_scr[...] = n_new
+
+    @pl.when(ci == nc - 1)
+    def _emit():
+        s_out_ref[0] = S_new
+        n_out_ref[0] = jnp.broadcast_to(n_new, n_out_ref.shape[1:])
+
+
+def gla_scan_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                 log_decay: jax.Array, *, chunk: int = 128,
+                 normalize: bool = False, interpret: bool = False):
+    """q/k: [BH, T, dk]; v: [BH, T, dv]; log_decay: [BH, T] (f32, <= 0).
+
+    Returns (y [BH, T, dv], S [BH, dk, dv], n [BH, dk]).
+    Initial state is zero (callers with a nonzero initial state use the
+    jnp reference — prefill/decode paths never hit the kernel).
+    """
+    BH, T, dk = q.shape
+    dv = v.shape[-1]
+    W = min(chunk, T)
+    assert T % W == 0, (T, W)
+    nc = T // W
+    LANES = 128
+    a = jnp.broadcast_to(log_decay[..., None], (BH, T, LANES))
+
+    kernel = functools.partial(_gla_kernel, normalize=normalize, nc=nc)
+    y, S, n = pl.pallas_call(
+        kernel,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, W, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, W, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, W, dv), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, W, LANES), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, W, dv), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, dk, dv), lambda b, c: (b, 0, 0)),
+            pl.BlockSpec((1, 8, dk), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, dv), v.dtype),
+            jax.ShapeDtypeStruct((BH, dk, dv), jnp.float32),
+            jax.ShapeDtypeStruct((BH, 8, dk), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((dk, dv), jnp.float32),
+            pltpu.VMEM((1, dk), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, a)
+    return y, S, n[:, 0, :]

@@ -1,0 +1,196 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+* :func:`flash_attention` — model-layout GQA flash attention with a
+  memory-O(T * block) chunked backward (consumes the kernel's LSE).
+* :func:`gla_scan` — chunked gated linear recurrence; backward via the
+  linear-memory jnp reference.
+* :func:`quantize_int8` / :func:`dequantize_int8` — unbiased int8
+  compression for the tiered gradient sync.
+
+On non-TPU backends the kernels run in ``interpret=True`` mode (the
+kernel body executes as traced JAX ops) — numerically identical, which
+is what the oracle tests rely on.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import gla_scan as gs
+from repro.kernels import int8_quant as iq
+from repro.kernels import ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+def _pick_block(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (prefers multiples of 128)."""
+    b = min(target, n)
+    while n % b:
+        b -= 1
+    return b
+
+
+@functools.lru_cache(maxsize=None)
+def _make_flash(causal: bool, window: int, block_q: int, block_k: int,
+                interpret: bool):
+    @jax.custom_vjp
+    def f(q, k, v):
+        o, _ = fa.flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                      block_q=block_q, block_k=block_k,
+                                      interpret=interpret)
+        return o
+
+    def fwd(q, k, v):
+        o, lse = fa.flash_attention_fwd(q, k, v, causal=causal,
+                                        window=window, block_q=block_q,
+                                        block_k=block_k,
+                                        interpret=interpret)
+        return o, (q, k, v, o, lse)
+
+    def bwd(res, do):
+        q, k, v, o, lse = res
+        BH, T, hd = q.shape
+        BKV, S, _ = k.shape
+        rep = BH // BKV
+        bk = _pick_block(S, block_k)
+        scale = 1.0 / (hd ** 0.5)
+
+        qf = q.astype(jnp.float32).reshape(BKV, rep, T, hd)
+        dof = do.astype(jnp.float32).reshape(BKV, rep, T, hd)
+        of = o.astype(jnp.float32).reshape(BKV, rep, T, hd)
+        lsef = lse.reshape(BKV, rep, T)
+        delta = jnp.sum(dof * of, axis=-1)             # [BKV, rep, T]
+        kb = k.astype(jnp.float32).reshape(BKV, S // bk, bk, hd)
+        vb = v.astype(jnp.float32).reshape(BKV, S // bk, bk, hd)
+        qpos = jnp.arange(T)
+
+        def step(dq, xs):
+            kj, vj, j = xs                             # [BKV, bk, hd]
+            kpos = j * bk + jnp.arange(bk)
+            s = jnp.einsum("brth,bkh->brtk", qf, kj) * scale
+            mask = jnp.ones((T, bk), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window > 0:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(mask[None, None], s, ref.NEG_INF)
+            p = jnp.exp(s - lsef[..., None])           # [BKV, rep, T, bk]
+            dv_j = jnp.einsum("brtk,brth->bkh", p, dof)
+            dp = jnp.einsum("brth,bkh->brtk", dof, vj)
+            ds = p * (dp - delta[..., None])
+            dq = dq + scale * jnp.einsum("brtk,bkh->brth", ds, kj)
+            dk_j = scale * jnp.einsum("brtk,brth->bkh", ds, qf)
+            return dq, (dk_j, dv_j)
+
+        dq0 = jnp.zeros_like(qf)
+        dq, (dk, dv) = jax.lax.scan(
+            step, dq0, (kb.swapaxes(0, 1), vb.swapaxes(0, 1),
+                        jnp.arange(S // bk)))
+        dk = dk.swapaxes(0, 1).reshape(BKV, S, hd)
+        dv = dv.swapaxes(0, 1).reshape(BKV, S, hd)
+        return (dq.reshape(BH, T, hd).astype(q.dtype),
+                dk.astype(k.dtype), dv.astype(v.dtype))
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Model layout: q [B, T, H, hd]; k/v [B, S, KV, hd] -> [B, T, H, hd]."""
+    B, T, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    interp = _interpret() if interpret is None else interpret
+    bq = _pick_block(T, block_q)
+    bk = _pick_block(S, block_k)
+    f = _make_flash(causal, int(window), bq, bk, interp)
+    qh = q.swapaxes(1, 2).reshape(B * H, T, hd)
+    kh = k.swapaxes(1, 2).reshape(B * KV, S, hd)
+    vh = v.swapaxes(1, 2).reshape(B * KV, S, hd)
+    o = f(qh, kh, vh)
+    return o.reshape(B, H, T, hd).swapaxes(1, 2)
+
+
+# ---------------------------------------------------------------------------
+# GLA scan
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _make_gla(chunk: int, normalize: bool, interpret: bool):
+    @jax.custom_vjp
+    def f(q, k, v, a):
+        y, S, n = gs.gla_scan_fwd(q, k, v, a, chunk=chunk,
+                                  normalize=normalize, interpret=interpret)
+        return y, S, n
+
+    def fwd(q, k, v, a):
+        out = gs.gla_scan_fwd(q, k, v, a, chunk=chunk, normalize=normalize,
+                              interpret=interpret)
+        return out, (q, k, v, a)
+
+    def bwd(res, cts):
+        q, k, v, a = res
+        _, vjp = jax.vjp(
+            lambda q, k, v, a: ref.ref_gla(q, k, v, a, normalize=normalize),
+            q, k, v, a)
+        return vjp(cts)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def gla_scan(q: jax.Array, k: jax.Array, v: jax.Array,
+             log_decay: jax.Array, *, chunk: int = 128,
+             normalize: bool = False, initial_state=None,
+             interpret: Optional[bool] = None):
+    """Model layout: q/k [B, T, H, dk]; v [B, T, H, dv];
+    log_decay [B, T, H].  Contract matches chunked_gla."""
+    if initial_state is not None:
+        # decode/chained-prefill path: stay on the jnp reference.
+        from repro.models.lm.gla import chunked_gla
+        return chunked_gla(q, k, v, log_decay, chunk=chunk,
+                           normalize=normalize, initial_state=initial_state,
+                           use_kernel=False)
+    B, T, H, dk = q.shape
+    dv = v.shape[-1]
+    interp = _interpret() if interpret is None else interpret
+    f = _make_gla(min(chunk, T), normalize, interp)
+    qh = q.swapaxes(1, 2).reshape(B * H, T, dk)
+    kh = k.swapaxes(1, 2).reshape(B * H, T, dk)
+    vh = v.swapaxes(1, 2).reshape(B * H, T, dv)
+    ah = log_decay.astype(jnp.float32).swapaxes(1, 2).reshape(B * H, T)
+    y, S, n = f(qh, kh, vh, ah)
+    return (y.reshape(B, H, T, dv).swapaxes(1, 2),
+            (S.reshape(B, H, dk, dv), n.reshape(B, H, dk)))
+
+
+# ---------------------------------------------------------------------------
+# Int8 compression
+# ---------------------------------------------------------------------------
+
+def quantize_int8(x: jax.Array, key: jax.Array, *,
+                  interpret: Optional[bool] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Flattens to 2D rows of <= 2**14 lanes, quantizes with stochastic
+    rounding.  Returns (q int8, scale f32 per row) in the 2D layout plus
+    enough info to invert (see :func:`dequantize_int8`)."""
+    interp = _interpret() if interpret is None else interpret
+    noise = jax.random.uniform(key, x.shape, jnp.float32)
+    return iq.quantize_int8(x, noise, interpret=interp)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return iq.dequantize_int8(q, scale)

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for the Pallas kernels (kernel-native layouts).
+
+Each function is the simplest correct implementation of the kernel
+contract — tests assert the kernels match these to tight tolerances
+across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool, window: int = 0
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """q: [BH, T, hd]; k/v: [BKV, S, hd].  Returns (o, lse [BH, T])."""
+    BH, T, hd = q.shape
+    BKV, S, _ = k.shape
+    rep = BH // BKV
+    scale = 1.0 / (hd ** 0.5)
+    qf = q.astype(jnp.float32).reshape(BKV, rep, T, hd) * scale
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("brth,bsh->brts", qf, kf)
+    qpos = jnp.arange(T)
+    kpos = jnp.arange(S)
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    lse = jax.nn.logsumexp(s, axis=-1)
+    p = jnp.exp(s - lse[..., None])
+    o = jnp.einsum("brts,bsh->brth", p, v.astype(jnp.float32))
+    return (o.reshape(BH, T, hd).astype(q.dtype),
+            lse.reshape(BH, T))
+
+
+def ref_gla(q: jax.Array, k: jax.Array, v: jax.Array, log_decay: jax.Array,
+            *, normalize: bool = False
+            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Step-by-step recurrence (the definition).  q/k: [BH, T, dk];
+    v: [BH, T, dv]; log_decay: [BH, T].  Returns (y, S_final, n_final)."""
+    BH, T, dk = q.shape
+    dv = v.shape[-1]
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    af = log_decay.astype(jnp.float32)
+
+    def step(carry, xs):
+        S, n = carry
+        qt, kt, vt, at = xs                      # [BH, dk] ... [BH]
+        g = jnp.exp(at)[:, None]
+        S = g[..., None] * S + kt[..., :, None] * vt[..., None, :]
+        n = g * n + kt
+        y = jnp.einsum("bk,bkv->bv", qt, S)
+        if normalize:
+            den = jnp.abs(jnp.einsum("bk,bk->b", qt, n))
+            y = y / jnp.maximum(den, 1.0)[:, None]
+        return (S, n), y
+
+    S0 = jnp.zeros((BH, dk, dv), jnp.float32)
+    n0 = jnp.zeros((BH, dk), jnp.float32)
+    (S, n), ys = jax.lax.scan(
+        step, (S0, n0),
+        (qf.swapaxes(0, 1), kf.swapaxes(0, 1), vf.swapaxes(0, 1),
+         af.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).astype(v.dtype), S, n
+
+
+def ref_quantize_int8(x: jax.Array, noise: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Row-wise absmax int8 quantization with supplied uniform noise."""
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-30) / 127.0
+    q = jnp.clip(jnp.floor(xf / scale + noise.astype(jnp.float32)),
+                 -127.0, 127.0)
+    return q.astype(jnp.int8), scale[:, 0]

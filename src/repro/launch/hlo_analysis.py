@@ -1,0 +1,383 @@
+"""Post-optimization HLO analysis: collective-traffic accounting and the
+three-term roofline.
+
+``collective_bytes`` parses ``compiled.as_text()``: every def line
+provides a name -> (dtype, shape) map; every ``all-gather`` /
+``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` instruction contributes the byte size of its
+*operands* (the data handed to the transport), summed over the module.
+The text is the per-partition SPMD module, so totals are per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+_ELEM_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# def line:   %name = bf16[1,2,3]{...} op-name(...)  /  name.1 = (tuple...)
+# tuple types may contain one level of nesting and per-element layouts.
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*"
+    r"((?:\((?:[^()]|\([^()]*\))*\))|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_OPERAND_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _ELEM_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _ELEM_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def describe(self) -> str:
+        parts = [f"{k}: n={self.count_by_kind[k]} "
+                 f"{self.bytes_by_kind[k]/1e9:.3f}GB"
+                 for k in sorted(self.bytes_by_kind)]
+        return "; ".join(parts) if parts else "none"
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    sizes: Dict[str, int] = {}
+    bytes_by: Dict[str, int] = {}
+    count_by: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str = m.group(1), m.group(2)
+        sizes[name.lstrip("%")] = _shape_bytes(type_str)
+        # match the op kind after the '=' and type
+        rest = line[m.end():]
+        opm = re.match(r"\s*([\w\-]+)", rest)
+        if not opm:
+            continue
+        kind = opm.group(1)
+        base = None
+        for c in _COLLECTIVES:
+            if kind == c or kind.startswith(c + "-"):  # e.g. all-reduce-start
+                base = c
+                break
+        if base is None or kind.endswith("-done"):
+            continue
+        # operand bytes: names inside the first (...) after the op kind
+        pm = _OPERAND_RE.search(rest)
+        nbytes = 0
+        if pm:
+            for tok in pm.group(1).split(","):
+                tok = tok.strip()
+                nm = re.match(r"(?:[a-z0-9]+\[[\d,]*\]\{[^}]*\}\s+)?%?"
+                              r"([\w.\-]+)", tok)
+                if nm and nm.group(1) in sizes:
+                    nbytes += sizes[nm.group(1)]
+        if nbytes == 0:
+            nbytes = sizes.get(name.lstrip("%"), 0)
+        bytes_by[base] = bytes_by.get(base, 0) + nbytes
+        count_by[base] = count_by.get(base, 0) + 1
+    return CollectiveStats(bytes_by, count_by)
+
+
+# ---------------------------------------------------------------------------
+# Loop-aware HLO cost walk
+# ---------------------------------------------------------------------------
+#
+# XLA's HloCostAnalysis (what ``compiled.cost_analysis()`` surfaces) counts
+# a ``while`` body ONCE, so a scanned 64-layer model reports ~1/64th of its
+# real FLOPs.  The walker below parses the post-optimization module text,
+# builds the computation call graph, extracts loop trip counts from the
+# loop-condition constants, and accumulates dot FLOPs and operand/result
+# bytes with bodies multiplied by their trip counts.
+
+_COMP_HEAD_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*"
+                           r"(?:->\s*[^{]*)?\{\s*$")
+_CALLEE_SINGLE_RE = re.compile(
+    r"(to_apply|body|condition|calls)=%?([\w.\-]+)")
+_CALLEE_MULTI_RE = re.compile(
+    r"(branch_computations|called_computations)=\{([^}]*)\}")
+_DOT_DNUMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONST_RE = re.compile(r"=\s*[su](?:8|16|32|64)\[\]\s*constant\((\d+)\)")
+
+
+@dataclasses.dataclass
+class _Instr:
+    kind: str
+    result_bytes: int
+    result_dims: Tuple[int, ...]
+    operand_names: Tuple[str, ...]
+    callees: Tuple[str, ...]          # non-condition callees
+    cond: Optional[str]               # while-condition computation
+    flops: float                      # own flops (dot/conv only)
+
+
+def _parse_dims(type_str: str) -> Tuple[int, ...]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return ()
+    return tuple(int(d) for d in m.group(2).split(",") if d.strip())
+
+
+def _dot_flops(line: str, result_dims, operand_dims) -> float:
+    m = _DOT_DNUMS_RE.search(line)
+    if not m or not operand_dims:
+        return 0.0
+    contract = [int(i) for i in m.group(1).split(",") if i.strip()]
+    k = 1
+    for i in contract:
+        if i < len(operand_dims):
+            k *= operand_dims[i]
+    n = 1
+    for d in result_dims:
+        n *= d
+    return 2.0 * n * k
+
+
+class HloCostWalk:
+    """Parse + walk one HLO module text."""
+
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, list] = {}
+        self.shapes: Dict[str, Tuple[str, Tuple[int, ...], int]] = {}
+        self._memo: Dict[str, Tuple[float, float, float]] = {}
+        self.trip_counts: Dict[str, int] = {}
+        self._parse(hlo_text)
+
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            if not line.startswith(" ") and line.endswith("{") and \
+                    not line.startswith("HloModule"):
+                head = line.strip()
+                if head.startswith("ENTRY "):
+                    head = head[len("ENTRY "):]
+                cur = head.split()[0].split("(")[0].lstrip("%")
+                self.comps[cur] = []
+                continue
+            if line.strip() == "}":
+                continue
+            if cur is None:
+                continue
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            name = m.group(1).lstrip("%")
+            type_str = m.group(2)
+            dims = _parse_dims(type_str)
+            nbytes = _shape_bytes(type_str)
+            rest = line[m.end():]
+            opm = re.match(r"\s*([\w\-]+)", rest)
+            kind = opm.group(1) if opm else "?"
+            pm = _OPERAND_RE.search(rest)
+            operands = []
+            if pm:
+                for tok in pm.group(1).split(","):
+                    tok = tok.strip()
+                    nm = re.match(r"(?:[a-z0-9]+\[[\d,]*\]\{[^}]*\}\s+)?%?"
+                                  r"([\w.\-]+)", tok)
+                    if nm:
+                        operands.append(nm.group(1))
+            callees = []
+            cond = None
+            for key, val in _CALLEE_SINGLE_RE.findall(rest):
+                if key == "condition":
+                    cond = val
+                else:
+                    callees.append(val)
+            for _, val in _CALLEE_MULTI_RE.findall(rest):
+                callees.extend(c.strip().lstrip("%")
+                               for c in val.split(",") if c.strip())
+            flops = 0.0
+            if kind == "dot":
+                op_dims = (self.shapes.get(operands[0], ("", (), 0))[1]
+                           if operands else ())
+                flops = _dot_flops(rest, dims, op_dims)
+            self.shapes[name] = (kind, dims, nbytes)
+            self.comps[cur].append(_Instr(
+                kind=kind, result_bytes=nbytes, result_dims=dims,
+                operand_names=tuple(operands), callees=tuple(callees),
+                cond=cond, flops=flops))
+            # remember per-computation constants for trip-count extraction
+            cc = _CONST_RE.search(line)
+            if cc:
+                self.trip_counts[cur] = max(
+                    self.trip_counts.get(cur, 0), int(cc.group(1)))
+
+    def _entry(self) -> str:
+        for name in self.comps:
+            if "main" in name:
+                return name
+        return next(iter(self.comps))
+
+    def _root_kind(self, ins: "_Instr") -> str:
+        for c in ins.callees:
+            body = self.comps.get(c)
+            if body:
+                return body[-1].kind
+        return ""
+
+    def _contains_kind(self, ins: "_Instr", kind: str) -> bool:
+        for c in ins.callees:
+            for sub in self.comps.get(c, ()):
+                if sub.kind == kind:
+                    return True
+        return False
+
+    def cost(self, comp: Optional[str] = None
+             ) -> Tuple[float, float, float]:
+        """Returns (flops, hbm_bytes, collective_bytes), while bodies
+        multiplied by their trip counts.
+
+        Bytes model: every *top-level* instruction of a computation reads
+        its operands and writes its result once (fusion internals are free
+        — that is what fusion means); parameters/constants are free.
+        Collective bytes = operand bytes of every collective op.
+        """
+        comp = comp or self._entry()
+        if comp in self._memo:
+            return self._memo[comp]
+        self._memo[comp] = (0.0, 0.0, 0.0)    # cycle guard
+        flops = 0.0
+        nbytes = 0.0
+        cbytes = 0.0
+        for ins in self.comps.get(comp, ()):
+            if ins.kind in ("parameter", "constant", "get-tuple-element",
+                            "tuple", "bitcast"):
+                continue
+            flops += ins.flops
+            op_sizes = [self.shapes.get(op, ("", (), 0))[2]
+                        for op in ins.operand_names]
+            op_bytes = sum(op_sizes)
+            big = max(op_sizes) if op_sizes else 0
+            if ins.kind == "while":
+                pass        # carried tuple is aliased in place, not moved
+            elif ins.kind == "dynamic-slice":
+                nbytes += 2 * ins.result_bytes
+            elif ins.kind == "dynamic-update-slice" or (
+                    ins.kind == "fusion" and self._contains_kind(
+                        ins, "dynamic-update-slice")):
+                # in-place update: the big aliased buffer is neither fully
+                # read nor fully rewritten — only the update slice moves.
+                nbytes += 2 * max(op_bytes - big, 0)
+            elif ins.kind == "fusion" and big > 4 * ins.result_bytes and \
+                    self._contains_kind(ins, "dynamic-slice"):
+                # sliced read of a loop-carried stack: only the slice moves.
+                nbytes += 2 * ins.result_bytes + (op_bytes - big)
+            else:
+                nbytes += ins.result_bytes + op_bytes
+            if any(ins.kind == c or ins.kind.startswith(c + "-")
+                   for c in _COLLECTIVES) and not ins.kind.endswith("-done"):
+                cbytes += op_bytes if op_bytes else ins.result_bytes
+            if ins.kind == "while":
+                # trip count = the comparison constant in the condition
+                trip = self.trip_counts.get(ins.cond, 1) if ins.cond else 1
+                for c in ins.callees:
+                    f, b, cb = self.cost(c)
+                    flops += f * trip
+                    nbytes += b * trip
+                    cbytes += cb * trip
+            elif ins.kind == "fusion":
+                # fused internals: flops real, intermediate bytes free
+                for c in ins.callees:
+                    f, _, cb = self.cost(c)
+                    flops += f
+                    cbytes += cb
+            elif ins.callees:
+                for c in ins.callees:
+                    f, b, cb = self.cost(c)
+                    flops += f
+                    nbytes += b
+                    cbytes += cb
+        self._memo[comp] = (flops, nbytes, cbytes)
+        return self._memo[comp]
+
+
+def loop_aware_cost(hlo_text: str) -> Tuple[float, float, float]:
+    """(flops, approx hbm bytes, collective bytes) per device,
+    loop-corrected."""
+    walk = HloCostWalk(hlo_text)
+    return walk.cost()
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    chips: int
+    peak_flops: float
+    hbm_bw: float
+    link_bw: float
+    model_flops: float = 0.0          # 6*N*D (or 6*N_active*D)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / self.peak_flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / self.hbm_bw
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / self.link_bw
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the chip's peak the step would achieve if it runs
+        exactly at the dominant-term bound: useful FLOPs / (bound_s * chips
+        * peak)."""
+        denom = self.bound_s * self.chips * self.peak_flops
+        return self.model_flops / denom if denom else 0.0
+
+    def row(self) -> Dict[str, float]:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "hlo_flops_global": self.flops_per_device * self.chips,
+            "useful_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }

@@ -1,0 +1,231 @@
+"""Layered CNNs from the paper's evaluation (LeNet-5, AlexNet) in pure JAX.
+
+A model is an ordered list of :class:`LayerSpec`.  Each layer carries the
+metadata the HierTrain profiling stage needs (``MP_i`` parameter bytes,
+``MO_i`` per-sample output bytes, forward FLOPs) and the pieces the hybrid
+execution engine needs (segment-wise ``apply``).
+
+Shapes are NHWC.  Convs are followed by ReLU and optional max-pool; the first
+Dense after a Conv flattens implicitly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    name: str
+    out_ch: int
+    kernel: int
+    stride: int = 1
+    padding: str = "SAME"
+    pool: int = 1  # max-pool window == stride applied after ReLU (1 = none)
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseSpec:
+    name: str
+    out: int
+    relu: bool = True
+
+
+LayerSpec = Any  # ConvSpec | DenseSpec
+
+
+@dataclasses.dataclass
+class LayerMeta:
+    name: str
+    param_count: int
+    out_elems: int      # per sample
+    flops_fwd: int      # per sample
+    out_shape: Tuple[int, ...]  # per sample
+
+    @property
+    def param_bytes(self) -> int:
+        return 4 * self.param_count
+
+    @property
+    def out_bytes(self) -> int:
+        return 4 * self.out_elems
+
+
+@dataclasses.dataclass
+class LayeredModel:
+    """A sequential model with per-layer params and segment execution."""
+    name: str
+    specs: Tuple[LayerSpec, ...]
+    input_shape: Tuple[int, ...]  # per-sample, e.g. (32, 32, 3)
+    num_classes: int
+
+    # ---- init ----------------------------------------------------------
+    def init(self, key: jax.Array) -> List[Dict[str, jax.Array]]:
+        params: List[Dict[str, jax.Array]] = []
+        shape = self.input_shape
+        for spec in self.specs:
+            key, sub = jax.random.split(key)
+            if isinstance(spec, ConvSpec):
+                fan_in = spec.kernel * spec.kernel * shape[-1]
+                w = jax.random.normal(
+                    sub, (spec.kernel, spec.kernel, shape[-1], spec.out_ch),
+                    jnp.float32) * math.sqrt(2.0 / fan_in)
+                b = jnp.zeros((spec.out_ch,), jnp.float32)
+                params.append({"w": w, "b": b})
+                shape = _conv_out_shape(shape, spec)
+            else:
+                fan_in = int(np.prod(shape))
+                w = jax.random.normal(sub, (fan_in, spec.out),
+                                      jnp.float32) * math.sqrt(2.0 / fan_in)
+                b = jnp.zeros((spec.out,), jnp.float32)
+                params.append({"w": w, "b": b})
+                shape = (spec.out,)
+        return params
+
+    # ---- metadata (the profiling stage's MP_i / MO_i / FLOPs) ----------
+    def layer_meta(self) -> List[LayerMeta]:
+        metas: List[LayerMeta] = []
+        shape = self.input_shape
+        for spec in self.specs:
+            if isinstance(spec, ConvSpec):
+                out_shape = _conv_out_shape(shape, spec)
+                # conv output spatial size *before* pooling:
+                pre = _conv_out_shape(shape, dataclasses.replace(spec, pool=1))
+                flops = 2 * spec.kernel * spec.kernel * shape[-1] * \
+                    spec.out_ch * pre[0] * pre[1]
+                pcount = spec.kernel * spec.kernel * shape[-1] * spec.out_ch \
+                    + spec.out_ch
+            else:
+                fan_in = int(np.prod(shape))
+                out_shape = (spec.out,)
+                flops = 2 * fan_in * spec.out
+                pcount = fan_in * spec.out + spec.out
+            metas.append(LayerMeta(spec.name, pcount,
+                                   int(np.prod(out_shape)), int(flops),
+                                   out_shape))
+            shape = out_shape
+        return metas
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.specs)
+
+    # ---- execution ------------------------------------------------------
+    def apply_segment(self, params: Sequence[Dict[str, jax.Array]],
+                      x: jax.Array, start: int, stop: int) -> jax.Array:
+        """Run layers ``start..stop-1`` (0-indexed) on batch ``x``."""
+        for i in range(start, stop):
+            x = self.apply_layer(params[i], x, i)
+        return x
+
+    def apply_layer(self, p: Dict[str, jax.Array], x: jax.Array,
+                    i: int) -> jax.Array:
+        spec = self.specs[i]
+        if isinstance(spec, ConvSpec):
+            y = jax.lax.conv_general_dilated(
+                x, p["w"], window_strides=(spec.stride, spec.stride),
+                padding=spec.padding,
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            y = jax.nn.relu(y + p["b"])
+            if spec.pool > 1:
+                y = jax.lax.reduce_window(
+                    y, -jnp.inf, jax.lax.max,
+                    (1, spec.pool, spec.pool, 1),
+                    (1, spec.pool, spec.pool, 1), "VALID")
+            return y
+        # Dense: flatten if needed.
+        if x.ndim > 2:
+            x = x.reshape(x.shape[0], -1)
+        y = x @ p["w"] + p["b"]
+        return jax.nn.relu(y) if spec.relu else y
+
+    def apply(self, params: Sequence[Dict[str, jax.Array]],
+              x: jax.Array) -> jax.Array:
+        return self.apply_segment(params, x, 0, self.num_layers)
+
+    def loss(self, params: Sequence[Dict[str, jax.Array]], x: jax.Array,
+             labels: jax.Array, weights: jax.Array | None = None
+             ) -> jax.Array:
+        """Mean softmax cross-entropy; ``weights`` masks padded samples."""
+        logits = self.apply(params, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+        if weights is None:
+            return jnp.mean(nll)
+        return jnp.sum(nll * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+
+
+def _conv_out_shape(shape: Tuple[int, ...], spec: ConvSpec
+                    ) -> Tuple[int, ...]:
+    h, w, _ = shape
+    if spec.padding == "SAME":
+        oh = -(-h // spec.stride)
+        ow = -(-w // spec.stride)
+    else:  # VALID
+        oh = (h - spec.kernel) // spec.stride + 1
+        ow = (w - spec.kernel) // spec.stride + 1
+    if spec.pool > 1:
+        oh //= spec.pool
+        ow //= spec.pool
+    return (oh, ow, spec.out_ch)
+
+
+# ---------------------------------------------------------------------------
+# The two CNNs from §VI-A.
+# ---------------------------------------------------------------------------
+
+def lenet5(num_classes: int = 10) -> LayeredModel:
+    """LeNet-5 on CIFAR-10 (32x32x3), 5 trainable layers."""
+    return LayeredModel(
+        name="lenet5",
+        specs=(
+            ConvSpec("conv1", 6, 5, padding="VALID", pool=2),
+            ConvSpec("conv2", 16, 5, padding="VALID", pool=2),
+            DenseSpec("fc1", 120),
+            DenseSpec("fc2", 84),
+            DenseSpec("fc3", num_classes, relu=False),
+        ),
+        input_shape=(32, 32, 3),
+        num_classes=num_classes,
+    )
+
+
+def alexnet(num_classes: int = 200) -> LayeredModel:
+    """AlexNet (classic 224x224 geometry, tiny-ImageNet classes upscaled
+    to the canonical input size, as the paper's Chainer reference does),
+    8 trainable layers."""
+    return LayeredModel(
+        name="alexnet",
+        specs=(
+            ConvSpec("conv1", 64, 11, stride=4, padding="SAME", pool=2),
+            ConvSpec("conv2", 192, 5, padding="SAME", pool=2),
+            ConvSpec("conv3", 384, 3, padding="SAME"),
+            ConvSpec("conv4", 256, 3, padding="SAME"),
+            ConvSpec("conv5", 256, 3, padding="SAME", pool=2),
+            DenseSpec("fc6", 4096),
+            DenseSpec("fc7", 4096),
+            DenseSpec("fc8", num_classes, relu=False),
+        ),
+        input_shape=(224, 224, 3),
+        num_classes=num_classes,
+    )
+
+
+def alexnet_tiny(num_classes: int = 200) -> LayeredModel:
+    """AlexNet on native 64x64 tiny-ImageNet (used by the smoke tests —
+    the 224x224 version is too slow for per-test JAX execution on CPU)."""
+    m = alexnet(num_classes)
+    return LayeredModel(name="alexnet_tiny", specs=m.specs,
+                        input_shape=(64, 64, 3),
+                        num_classes=num_classes)
+
+
+MODELS: Dict[str, Callable[[], LayeredModel]] = {
+    "lenet5": lenet5,
+    "alexnet": alexnet,
+}

@@ -1,0 +1,103 @@
+"""Mixture-of-Experts layer: top-k routing, grouped dense dispatch.
+
+TPU-native formulation: tokens are processed in groups; dispatch/combine are
+one-hot einsums (Switch/Mesh-TF style), so under pjit with the expert dim
+sharded the compiler emits all-to-all style collectives instead of gathers.
+Capacity-dropping semantics with renormalized top-k gates; optional shared
+experts (Qwen-MoE) are a plain SwiGLU applied to every token.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.common import (Params, apply_swiglu, init_swiglu,
+                                    truncated_normal_init)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0            # shared experts (always-on)
+    d_ff_shared: int = 0         # total shared ff width
+    capacity_factor: float = 1.25
+    group_size: int = 1024       # tokens per dispatch group
+
+
+def init_moe(key: jax.Array, d_model: int, cfg: MoEConfig, dtype) -> Params:
+    kg, ke1, ke2, ke3, ks = jax.random.split(key, 5)
+    E, F = cfg.n_experts, cfg.d_ff_expert
+    p: Params = {
+        "router": truncated_normal_init(kg, (d_model, E), 1.0, jnp.float32),
+        "w_gate": truncated_normal_init(ke1, (E, d_model, F), 1.0, dtype),
+        "w_up": truncated_normal_init(ke2, (E, d_model, F), 1.0, dtype),
+        "w_down": truncated_normal_init(ke3, (E, F, d_model), 1.0, dtype),
+    }
+    if cfg.n_shared > 0:
+        width = cfg.d_ff_shared or cfg.n_shared * F
+        p["shared"] = init_swiglu(ks, d_model, width, dtype)
+    return p
+
+
+def apply_moe(p: Params, x: jax.Array, cfg: MoEConfig) -> jax.Array:
+    """x: [B, T, D] -> [B, T, D]."""
+    B, T, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    G = min(cfg.group_size, B * T)
+    tokens = x.reshape(-1, D)
+    n_tok = tokens.shape[0]
+    assert n_tok % G == 0, f"tokens {n_tok} % group {G} != 0"
+    ng = n_tok // G
+    xg = tokens.reshape(ng, G, D)
+
+    logits = (xg @ p["router"].astype(xg.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)               # [ng, G, E]
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)          # [ng, G, K]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    capacity = max(int(G * K * cfg.capacity_factor / E), 1)
+    # one-hot over experts for each of the K choices: [ng, G, K, E]
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)
+    # position of each (token, choice) within its expert's buffer
+    flat = onehot.reshape(ng, G * K, E)
+    pos = jnp.cumsum(flat, axis=1) * flat - 1.0            # [ng, G*K, E]
+    pos = pos.reshape(ng, G, K, E)
+    keep = (pos >= 0) & (pos < capacity)
+    pos = jnp.clip(pos, 0, capacity - 1).astype(jnp.int32)
+    pos_onehot = jax.nn.one_hot(pos, capacity, dtype=jnp.float32) * \
+        keep[..., None].astype(jnp.float32)
+    # dispatch tensor [ng, G, E, C]
+    dispatch = jnp.einsum("gske,gskec->gsec", onehot, pos_onehot)
+    combine = jnp.einsum("gsk,gske,gskec->gsec", gate_vals, onehot,
+                         pos_onehot)
+
+    expert_in = jnp.einsum("gsec,gsd->gecd", dispatch.astype(xg.dtype), xg)
+    h_gate = jax.nn.silu(jnp.einsum(
+        "gecd,edf->gecf", expert_in, p["w_gate"]).astype(jnp.float32)
+    ).astype(xg.dtype)
+    h_up = jnp.einsum("gecd,edf->gecf", expert_in, p["w_up"])
+    h = jnp.einsum("gecf,efd->gecd", h_gate * h_up, p["w_down"])
+    out = jnp.einsum("gsec,gecd->gsd", combine.astype(xg.dtype), h)
+
+    if "shared" in p:
+        out = out + apply_swiglu(p["shared"], xg)
+    return out.reshape(B, T, D)
+
+
+def router_aux_loss(p: Params, x: jax.Array, cfg: MoEConfig) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss (mean over groups)."""
+    B, T, D = x.shape
+    logits = (x.reshape(-1, D) @ p["router"].astype(x.dtype)
+              ).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, idx = jax.lax.top_k(probs, cfg.top_k)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(idx[..., 0], cfg.n_experts, dtype=jnp.float32),
+        axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    return cfg.n_experts * jnp.sum(frac_tokens * frac_probs)

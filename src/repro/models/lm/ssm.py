@@ -1,0 +1,166 @@
+"""Mamba2 (SSD) block on top of the chunked GLA primitive.
+
+Structure per block (pre-norm residual):
+  in_proj -> [z | xBC | dt];  depthwise causal conv4 + silu on xBC;
+  SSD recurrence (q=C, k=dt*B, v=x heads, decay=exp(-exp(A_log)*dt));
+  skip D*x; gate y*silu(z); RMSNorm; out_proj.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.common import (Params, rms_norm,
+                                    truncated_normal_init)
+from repro.models.lm.gla import chunked_gla, gla_decode_step
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    d_conv: int = 4
+    chunk: int = 128
+
+
+def d_inner(d_model: int, cfg: SSMConfig) -> int:
+    return cfg.expand * d_model
+
+
+def n_ssm_heads(d_model: int, cfg: SSMConfig) -> int:
+    return d_inner(d_model, cfg) // cfg.head_dim
+
+
+def init_mamba2(key: jax.Array, d_model: int, cfg: SSMConfig, dtype
+                ) -> Params:
+    di = d_inner(d_model, cfg)
+    nh = n_ssm_heads(d_model, cfg)
+    conv_ch = di + 2 * cfg.d_state
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": truncated_normal_init(
+            k1, (d_model, 2 * di + 2 * cfg.d_state + nh), 1.0, dtype),
+        "conv_w": truncated_normal_init(k2, (cfg.d_conv, conv_ch), 1.0,
+                                        dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),       # A = -exp(A_log) = -1
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),
+        "D_skip": jnp.ones((nh,), jnp.float32),
+        "norm_w": jnp.zeros((di,), dtype),
+        "out_proj": truncated_normal_init(k4, (di, d_model), 1.0, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv along T.  x: [B,T,C]; w: [K,C]; prev: [B,K-1,C]
+    carried state.  Returns (y [B,T,C], new_state [B,K-1,C])."""
+    K = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)           # [B, T+K-1, C]
+    # depthwise conv as a sum of shifted scalings (K is tiny, e.g. 4)
+    T = x.shape[1]
+    y = sum(xp[:, i:i + T, :] * w[i][None, None, :] for i in range(K))
+    return y + b, xp[:, -(K - 1):, :] if K > 1 else \
+        jnp.zeros((x.shape[0], 0, x.shape[2]), x.dtype)
+
+
+def _mamba2_forward(p: Params, x: jax.Array, cfg: SSMConfig,
+                    conv_prev: Optional[jax.Array] = None,
+                    use_kernel: bool = False
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Shared fwd path.  Returns (y, new_conv_state, final_S)."""
+    B, T, D = x.shape
+    di = d_inner(D, cfg)
+    nh = di // cfg.head_dim
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:2 * di + 2 * cfg.d_state]
+    dt_pre = zxbcdt[..., -nh:].astype(jnp.float32)
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"],
+                                 prev=conv_prev)
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x.dtype)
+    xin = xBC[..., :di]
+    Bmat = xBC[..., di:di + cfg.d_state]
+    Cmat = xBC[..., di + cfg.d_state:]
+    dt = jax.nn.softplus(dt_pre + p["dt_bias"])               # [B,T,nh]
+    log_decay = -jnp.exp(p["A_log"])[None, None, :] * dt      # [B,T,nh]
+
+    v = xin.reshape(B, T, nh, cfg.head_dim)
+    k = (Bmat[:, :, None, :] * dt[..., None]).astype(x.dtype)
+    k = jnp.broadcast_to(k, (B, T, nh, cfg.d_state))
+    q = jnp.broadcast_to(Cmat[:, :, None, :].astype(x.dtype),
+                         (B, T, nh, cfg.d_state))
+    y, (S_fin, _) = chunked_gla(q, k, v, log_decay, chunk=cfg.chunk,
+                                use_kernel=use_kernel)
+    y = y + v * p["D_skip"][None, None, :, None].astype(v.dtype)
+    y = y.reshape(B, T, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rms_norm(y, p["norm_w"])
+    return y @ p["out_proj"], new_conv, S_fin
+
+
+def apply_mamba2(p: Params, x: jax.Array, cfg: SSMConfig,
+                 use_kernel: bool = False) -> jax.Array:
+    """x: [B, T, D] -> [B, T, D] (training path)."""
+    y, _, _ = _mamba2_forward(p, x, cfg, use_kernel=use_kernel)
+    return y
+
+
+def prefill_mamba2(p: Params, x: jax.Array, cfg: SSMConfig,
+                   use_kernel: bool = False) -> Tuple[jax.Array, Params]:
+    """Prefill path: also return the recurrent cache for decode."""
+    y, conv, S = _mamba2_forward(p, x, cfg, use_kernel=use_kernel)
+    return y, {"conv": conv, "S": S}
+
+
+def init_mamba2_cache(batch: int, d_model: int, cfg: SSMConfig, dtype
+                      ) -> Params:
+    di = d_inner(d_model, cfg)
+    nh = di // cfg.head_dim
+    conv_ch = di + 2 * cfg.d_state
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, conv_ch), dtype),
+        "S": jnp.zeros((batch, nh, cfg.d_state, cfg.head_dim),
+                       jnp.float32),
+    }
+
+
+def decode_mamba2(p: Params, x: jax.Array, cache: Params, cfg: SSMConfig
+                  ) -> Tuple[jax.Array, Params]:
+    """x: [B, 1, D] single-token step with recurrent state."""
+    B, _, D = x.shape
+    di = d_inner(D, cfg)
+    nh = di // cfg.head_dim
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:2 * di + 2 * cfg.d_state]
+    dt_pre = zxbcdt[..., -nh:].astype(jnp.float32)
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"],
+                                 prev=cache["conv"])
+    xBC = jax.nn.silu(xBC.astype(jnp.float32)).astype(x.dtype)
+    xin = xBC[..., :di]
+    Bmat = xBC[..., di:di + cfg.d_state]
+    Cmat = xBC[..., di + cfg.d_state:]
+    dt = jax.nn.softplus(dt_pre + p["dt_bias"])[:, 0]          # [B,nh]
+    log_decay = -jnp.exp(p["A_log"])[None, :] * dt
+
+    v = xin.reshape(B, nh, cfg.head_dim)
+    k = (Bmat[:, 0, None, :] * dt[..., None]).astype(x.dtype)
+    k = jnp.broadcast_to(k, (B, nh, cfg.d_state))
+    q = jnp.broadcast_to(Cmat[:, 0, None, :].astype(x.dtype),
+                         (B, nh, cfg.d_state))
+    n_dummy = jnp.zeros((B, nh, cfg.d_state), jnp.float32)
+    y, (S_new, _) = gla_decode_step(q, k, v, log_decay,
+                                    (cache["S"], n_dummy))
+    y = y + v * p["D_skip"][None, :, None].astype(v.dtype)
+    y = y.reshape(B, 1, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rms_norm(y, p["norm_w"])
+    return y @ p["out_proj"], {"conv": new_conv, "S": S_new}

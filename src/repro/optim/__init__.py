@@ -1,0 +1,5 @@
+from repro.optim.optimizers import (AdamW, Optimizer, OptState, SGDMomentum,
+                                    get_optimizer, global_norm)
+
+__all__ = ["AdamW", "Optimizer", "OptState", "SGDMomentum",
+           "get_optimizer", "global_norm"]

@@ -1,0 +1,70 @@
+"""Serving runtime: prefill + decode step builders and a batched
+generation driver.
+
+The decode step is the unit the dry-run lowers for the ``decode_32k`` /
+``long_500k`` cells: one new token against a KV cache (attention archs)
+or recurrent state (SSM/xLSTM), batch sharded over ``(pod, data)``, the
+cache sharded per ``repro.distrib.cache_spec`` (KV heads over ``model``
+when divisible, else sequence-sharded with the LSE combine emerging
+from XLA's sharded-softmax handling).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+def make_prefill_step(model, max_len: int) -> Callable:
+    def prefill_step(params: Tree, batch: Dict[str, jax.Array]):
+        return model.prefill(params, batch, max_len)
+    return prefill_step
+
+
+def make_decode_step(model) -> Callable:
+    def decode_step(params: Tree, tok: jax.Array, cache: Tree,
+                    pos: jax.Array):
+        return model.decode_step(params, tok, cache, pos)
+    return decode_step
+
+
+def sample_token(logits: jax.Array, key: jax.Array,
+                 temperature: float = 0.0) -> jax.Array:
+    """logits [B, V] -> token [B, 1] (greedy when temperature == 0)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits / temperature, axis=-1)[:, None].astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: jax.Array          # [B, n_new]
+    prefill_logits: jax.Array
+
+
+def generate(model, params: Tree, batch: Dict[str, jax.Array], *,
+             max_len: int, n_new: int, key: Optional[jax.Array] = None,
+             temperature: float = 0.0) -> GenerationResult:
+    """Batched prefill-then-decode driver (the serving example path)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    prompt_len = batch["tokens"].shape[1]
+    if "embeds" in batch:
+        prompt_len += batch["embeds"].shape[1]
+    logits, cache = model.prefill(params, batch, max_len)
+    decode = jax.jit(make_decode_step(model))
+
+    toks = []
+    tok = sample_token(logits, key, temperature)
+    for i in range(n_new):
+        toks.append(tok)
+        step_logits, cache = decode(params, tok,
+                                    cache, jnp.int32(prompt_len + i))
+        tok = sample_token(step_logits, jax.random.fold_in(key, i),
+                           temperature)
+    return GenerationResult(tokens=jnp.concatenate(toks, axis=1),
+                            prefill_logits=logits)

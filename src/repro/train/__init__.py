@@ -1,0 +1,7 @@
+from repro.train.loop import (HierLoopConfig, InjectedFailure, LoopConfig,
+                              run_hier_loop, run_train_loop)
+from repro.train.step import TrainState, init_state, make_train_step
+
+__all__ = ["HierLoopConfig", "InjectedFailure", "LoopConfig",
+           "run_hier_loop", "run_train_loop", "TrainState", "init_state",
+           "make_train_step"]

@@ -1,0 +1,136 @@
+"""Cost-model (Eqs 1-12), scheduler (Alg 1), and baseline tests."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baselines, scheduler
+from repro.core.cost_model import (HierProfile, Network, Schedule, t_total)
+from repro.core.profiler import PAPER_TESTBED, analytic_profile
+from repro.models.cnn import alexnet, lenet5
+
+
+def tiny_profile(n_layers=3, seed=0, sample_bytes=1000.0):
+    rng = np.random.default_rng(seed)
+    return HierProfile(
+        layer_names=tuple(f"l{i}" for i in range(n_layers)),
+        L_f=rng.uniform(1e-4, 1e-2, (3, n_layers)),
+        L_b=rng.uniform(1e-4, 2e-2, (3, n_layers)),
+        L_u=rng.uniform(1e-5, 1e-3, (3, n_layers)),
+        MP=rng.uniform(1e3, 1e6, n_layers),
+        MO=rng.uniform(1e2, 1e5, n_layers),
+        sample_bytes=sample_bytes,
+    )
+
+
+NET = Network(bw_de=5e6 / 8, bw_ec=3e6 / 8)  # 5 / 3 Mbps in bytes/s
+
+
+def test_hand_computed_all_on_device():
+    """Everything on the device: T = B*(F+Bk) over all layers + update."""
+    prof = tiny_profile(2)
+    sched = Schedule("device", "device", "device", 0, 0, 8, 0, 0)
+    bd = t_total(prof, NET, sched)
+    expect = 8 * (prof.L_f[0].sum() + prof.L_b[0].sum()) + prof.L_u[0].sum()
+    assert bd.total == pytest.approx(expect, rel=1e-12)
+    assert bd.comm_input == 0.0
+
+
+def test_hand_computed_all_cloud_includes_input_transfer():
+    prof = tiny_profile(2)
+    B = 8
+    sched = Schedule("cloud", "cloud", "cloud", 0, 0, B, 0, 0)
+    bd = t_total(prof, NET, sched)
+    series = 1.0 / (1.0 / NET.bw_de + 1.0 / NET.bw_ec)
+    expect = B * prof.sample_bytes / series + \
+        B * (prof.L_f[2].sum() + prof.L_b[2].sum()) + prof.L_u[2].sum()
+    assert bd.total == pytest.approx(expect, rel=1e-12)
+
+
+def test_three_worker_schedule_phases():
+    """Hand-check Eq. (5)-(11) on a 3-layer net with m_s=1, m_l=2."""
+    prof = tiny_profile(3)
+    B, bo, bs, bl = 10, 4, 3, 3
+    sched = Schedule("cloud", "device", "edge", 1, 2, bo, bs, bl)
+    bd = t_total(prof, NET, sched)
+    series = 1.0 / (1.0 / NET.bw_de + 1.0 / NET.bw_ec)
+    Q = prof.sample_bytes
+    bw_os = series            # cloud-device
+    bw_ol = NET.bw_ec         # cloud-edge
+    t_in_o = bo * Q / series  # data starts at device, worker_o is cloud
+    t_in_s = 0.0              # worker_s IS the device
+    t_in_l = bl * Q / NET.bw_de
+    t_s_out = bs * prof.MO[0] / bw_os
+    t_l_out = bl * prof.MO[1] / bw_ol
+    f1 = max(t_in_o + bo * prof.L_f[2, 0],
+             t_in_s + bs * prof.L_f[0, 0] + t_s_out,
+             t_in_l + bl * prof.L_f[1, 0])
+    assert bd.t_f1 == pytest.approx(f1, rel=1e-12)
+    f2 = max((bo + bs) * prof.L_f[2, 1], bl * prof.L_f[1, 1] + t_l_out)
+    assert bd.t_f2 == pytest.approx(f2, rel=1e-12)
+    f3 = B * prof.L_f[2, 2]
+    assert bd.t_f3 == pytest.approx(f3, rel=1e-12)
+    upd = max(prof.L_u[2].sum(), prof.L_u[0, 0], prof.L_u[1, :2].sum()) + \
+        max(2 * prof.MP[0] / bw_os, 2 * prof.MP[:2].sum() / bw_ol)
+    assert bd.t_update == pytest.approx(upd, rel=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_scheduler_beats_brute_force_within_rounding(seed):
+    """Scheduler (LP + rounding) vs exhaustive integer search, small case."""
+    prof = tiny_profile(3, seed=seed)
+    B = 6
+    res = scheduler.solve(prof, NET, B)
+    # exhaustive integer optimum
+    best = np.inf
+    for wo, ws, wl in itertools.permutations(("device", "edge", "cloud")):
+        for m_s in range(4):
+            for m_l in range(m_s, 4):
+                for bo in range(B + 1):
+                    for bs in range(B + 1 - bo):
+                        bl = B - bo - bs
+                        if (m_s == 0 and bs > 0) or (m_l == 0 and bl > 0):
+                            continue
+                        sc = Schedule(wo, ws, wl, m_s, m_l, bo, bs, bl)
+                        best = min(best, t_total(prof, NET, sc).total)
+    assert res.t_total >= best - 1e-12  # can't beat the true optimum
+    assert res.t_total <= best * 1.25 + 1e-9  # rounding gap stays small
+
+
+def test_scheduler_never_worse_than_naive_baselines():
+    """All-Edge / All-Cloud are degenerate points of the search space."""
+    for model in (lenet5(), alexnet()):
+        prof = analytic_profile(model)
+        for bw_ec in (1.5e6 / 8, 3e6 / 8, 5e6 / 8):
+            net = Network(bw_de=5e6 / 8, bw_ec=bw_ec)
+            res = scheduler.solve(prof, net, B=32)
+            base = baselines.run_all(prof, net, B=32)
+            assert res.t_total <= base["all-edge"].t_total + 1e-9
+            assert res.t_total <= base["all-cloud"].t_total + 1e-9
+
+
+def test_constraints_14_15_enforced():
+    prof = tiny_profile(3)
+    with pytest.raises(AssertionError):
+        t_total(prof, NET, Schedule("cloud", "device", "edge", 0, 2, 4, 2, 2))
+    with pytest.raises(AssertionError):
+        t_total(prof, NET, Schedule("cloud", "device", "edge", 0, 0, 4, 0, 2))
+
+
+def test_batch_conservation_in_scheduler():
+    prof = analytic_profile(lenet5())
+    res = scheduler.solve(prof, NET, B=17)
+    s = res.schedule
+    assert s.b_o + s.b_s + s.b_l == 17
+    assert s.b_o >= 0 and s.b_s >= 0 and s.b_l >= 0
+    assert 0 <= s.m_s <= s.m_l <= prof.num_layers
+
+
+def test_jalad_compression_helps_at_low_bandwidth():
+    prof = analytic_profile(alexnet())
+    low = Network(bw_de=5e6 / 8, bw_ec=1.5e6 / 8)
+    j = baselines.jalad(prof, low, B=32)
+    nocomp = baselines.jalad(prof, low, B=32, compress_bits=32)
+    assert j.t_total <= nocomp.t_total + 1e-9

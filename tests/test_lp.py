@@ -1,0 +1,88 @@
+"""Unit + property tests for the two-phase simplex solver."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lp import linprog
+
+
+def test_basic_min():
+    # min -x - 2y  s.t. x + y <= 4, x <= 2  =>  x=2? no: y free up to 4.
+    # optimum at (0,4): obj -8?  x+y<=4, x<=2: (0,4) gives -8; (2,2) gives -6.
+    res = linprog(np.array([-1.0, -2.0]),
+                  A_ub=np.array([[1.0, 1.0], [1.0, 0.0]]),
+                  b_ub=np.array([4.0, 2.0]))
+    assert res.success
+    assert res.fun == pytest.approx(-8.0, abs=1e-8)
+    assert res.x[1] == pytest.approx(4.0, abs=1e-8)
+
+
+def test_equality_constraint():
+    # min x + y s.t. x + y = 3 => obj 3 (any split).
+    res = linprog(np.array([1.0, 1.0]),
+                  A_eq=np.array([[1.0, 1.0]]), b_eq=np.array([3.0]))
+    assert res.success
+    assert res.fun == pytest.approx(3.0, abs=1e-8)
+
+
+def test_infeasible():
+    # x <= -1 with x >= 0 is infeasible.
+    res = linprog(np.array([1.0]), A_ub=np.array([[1.0]]),
+                  b_ub=np.array([-1.0]))
+    assert not res.success
+    assert res.status == "infeasible"
+
+
+def test_unbounded():
+    res = linprog(np.array([-1.0]))
+    assert not res.success
+    assert res.status == "unbounded"
+
+
+def test_degenerate_negative_rhs():
+    # -x <= -2  (i.e. x >= 2), min x => 2.
+    res = linprog(np.array([1.0]), A_ub=np.array([[-1.0]]),
+                  b_ub=np.array([-2.0]))
+    assert res.success
+    assert res.fun == pytest.approx(2.0, abs=1e-8)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_epigraph_matches_grid(seed):
+    """The HierTrain-shaped LP (min sum of epigraph maxima over a simplex)
+    must match a dense grid search over the batch split."""
+    rng = np.random.default_rng(seed)
+    B = 16
+    # three affine arms per max-term, coefficients >= 0 like the cost model
+    w1 = rng.uniform(0.0, 2.0, size=3)
+    w2 = rng.uniform(0.0, 2.0, size=3)
+    # LP: x = [b0,b1,b2,t1,t2]; min t1+t2
+    A_ub = []
+    b_ub = []
+    for k in range(3):
+        row = np.zeros(5)
+        row[k] = w1[k]
+        row[3] = -1.0
+        A_ub.append(row)
+        b_ub.append(0.0)
+        row = np.zeros(5)
+        row[k] = w2[k]
+        row[4] = -1.0
+        A_ub.append(row)
+        b_ub.append(0.0)
+    A_eq = np.zeros((1, 5))
+    A_eq[0, :3] = 1.0
+    res = linprog(np.array([0, 0, 0, 1.0, 1.0]), np.array(A_ub),
+                  np.array(b_ub), A_eq, np.array([float(B)]))
+    assert res.success
+    # fine grid search over the (real-valued) simplex
+    best = np.inf
+    steps = 64
+    for i in range(steps + 1):
+        for j in range(steps + 1 - i):
+            b = np.array([i, j, steps - i - j], float) * (B / steps)
+            val = max(w1 * b) + max(w2 * b)
+            best = min(best, val)
+    assert res.fun <= best + 1e-6
+    assert res.fun >= best - 0.05 * abs(best) - 1e-6

@@ -1,0 +1,90 @@
+"""Fault tolerance: failure injection + restart gives the SAME final
+state as an uninterrupted run (checkpoint/restart + stateless data
+skip-ahead), and the HierTrain CNN loop re-schedules around stragglers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeSpec
+from repro.data.pipeline import SyntheticImages, make_lm_batch_fn
+from repro.models.lm.model import LMConfig, build_model
+from repro.optim import get_optimizer
+from repro.train.loop import (HierLoopConfig, InjectedFailure, LoopConfig,
+                              run_hier_loop, run_train_loop)
+from repro.train.step import init_state, make_train_step
+
+CFG = LMConfig("tiny", "dense", n_layers=2, d_model=32, n_heads=2,
+               n_kv_heads=1, d_ff=64, vocab=64, dtype=jnp.float32)
+
+
+def _setup():
+    model = build_model(CFG)
+    opt = get_optimizer("adamw", lr=1e-3, weight_decay=0.0)
+    state = init_state(model, opt, jax.random.PRNGKey(0))
+    shape = ShapeSpec("t", 32, 4, "train")
+    batch_fn = make_lm_batch_fn(CFG, shape, seed=0)
+    step = jax.jit(make_train_step(model, opt))
+    return state, step, batch_fn
+
+
+def test_failure_restart_bit_identical(tmp_path):
+    total = 12
+    # uninterrupted reference run (no checkpointing)
+    state, step, batch_fn = _setup()
+    ref = run_train_loop(LoopConfig(total, log_every=0), state, step,
+                         batch_fn, log=None)["state"]
+
+    # run that dies at step 7, then restarts from the step-5 checkpoint
+    state, step2, batch_fn = _setup()
+    cfg = LoopConfig(total, ckpt_every=5, ckpt_dir=str(tmp_path),
+                     log_every=0, fail_at=7)
+    with pytest.raises(InjectedFailure):
+        run_train_loop(cfg, state, step2, batch_fn, log=None)
+    state, step3, batch_fn = _setup()     # fresh process simulation
+    cfg2 = LoopConfig(total, ckpt_every=5, ckpt_dir=str(tmp_path),
+                      log_every=0)
+    out = run_train_loop(cfg2, state, step3, batch_fn, log=None)
+    assert out["resumed_from"] == 5
+
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(out["state"])):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_loss_decreases():
+    state, step, batch_fn = _setup()
+    out = run_train_loop(LoopConfig(30, log_every=5), state, step,
+                         batch_fn, log=None)
+    losses = [h["loss"] for h in out["history"]]
+    assert losses[-1] < losses[0]
+
+
+def test_hier_loop_straggler_resched():
+    """Degrading the edge 8x mid-run (a thermally-throttled / contended
+    straggler) makes the online re-scheduler move work off the edge —
+    AlexNet-tiny, where the edge is the scheduling workhorse (LeNet's
+    optimum is all-device, so its schedule is slowdown-invariant)."""
+    from repro.core.cost_model import Network
+    from repro.core.profiler import ALEXNET_TESTBED, analytic_profile
+    from repro.models.cnn import alexnet_tiny
+
+    model = alexnet_tiny(num_classes=10)
+    profile = analytic_profile(model, ALEXNET_TESTBED)
+    # 1 Mbps edge-cloud: the initial optimum leans on the edge worker
+    net = Network(bw_de=5e6 / 8, bw_ec=1e6 / 8)
+    data = SyntheticImages(model.input_shape, model.num_classes, 16,
+                           seed=0)
+
+    def slowdown(step):
+        return {"edge": 8.0} if step >= 20 else {}
+
+    out = run_hier_loop(
+        HierLoopConfig(total_steps=41, batch=16, resched_every=10,
+                       ema=0.5, lr=0.01),
+        model, profile, net, data, worker_slowdown=slowdown)
+    hist = out["history"]
+    early = (hist[5]["m_s"], hist[5]["m_l"], hist[5]["b"])
+    late = (hist[-1]["m_s"], hist[-1]["m_l"], hist[-1]["b"])
+    assert early != late, "re-scheduler never adapted to the straggler"
+    assert hist[-1]["loss"] < hist[0]["loss"]
