@@ -1,7 +1,11 @@
 """Shared benchmark plumbing: the paper's testbed profiles + bandwidth
-sweeps (§VI-B) and a tiny CSV/markdown table printer."""
+sweeps (§VI-B), a tiny CSV/markdown table printer, and the JSON sink the
+perf-tracking mode (``benchmarks/run.py --json``) writes through."""
 from __future__ import annotations
 
+import json
+import platform
+import time
 from typing import Dict, Iterable, List, Sequence
 
 from repro.core.cost_model import HierProfile, Network
@@ -45,3 +49,17 @@ def table(rows: Sequence[Dict], cols: Sequence[str],
             f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
             for c in cols) + " |")
     return "\n".join(out)
+
+
+def write_json(path: str, payload: Dict) -> str:
+    """Write a benchmark payload with host/time provenance; returns path."""
+    doc = {
+        "generated_unix": time.time(),
+        "host": {"machine": platform.machine(),
+                 "python": platform.python_version()},
+        **payload,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=False)
+        f.write("\n")
+    return path

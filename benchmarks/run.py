@@ -1,12 +1,20 @@
 """Benchmark orchestrator: one section per paper table/figure, plus the
-roofline report if dry-run results exist.  ``python -m benchmarks.run``."""
+roofline report if dry-run results exist.  ``python -m benchmarks.run``.
+
+``--json [PATH]`` switches to perf-tracking mode: instead of printing every
+section it re-times the Table II scheduler search with both backends
+(reference scalar simplex vs batched engine) and writes the runtimes and
+speedups to ``BENCH_sched.json`` (or PATH), so the scheduler-engine perf
+trajectory is tracked across PRs.
+"""
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 
 
-def main() -> None:
+def run_sections() -> int:
     from benchmarks import (fig6_model_validity, fig7_8_speedup,
                             fig9_10_sota, fig11_edge_cpu, roofline_report,
                             table2_sched_runtime)
@@ -30,7 +38,38 @@ def main() -> None:
             import traceback
             traceback.print_exc()
             print(f"-- FAILED: {e}")
-    sys.exit(1 if failures else 0)
+    return 1 if failures else 0
+
+
+def run_sched_json(path: str) -> int:
+    from benchmarks import table2_sched_runtime
+    from benchmarks.common import write_json
+    payload = table2_sched_runtime.run_json()
+    write_json(path, payload)
+    rows = payload["rows"]
+    print(f"wrote {path}")
+    for r in rows:
+        print(f"  {r['network']:>10} (N={r['layers']:>2}): "
+              f"reference {r['reference_s']:.3f}s -> "
+              f"batched {r['batched_s']:.3f}s "
+              f"({r['speedup']:.1f}x, {r['pruned']} of "
+              f"{r['candidates']} LPs pruned)")
+    print(f"  min speedup for N >= 16: "
+          f"{payload['min_speedup_n_ge_16']:.1f}x")
+    return 0
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--json", nargs="?", const="BENCH_sched.json",
+                        default=None, metavar="PATH",
+                        help="write reference-vs-batched Table II scheduler "
+                             "runtimes to PATH (default BENCH_sched.json) "
+                             "instead of running every section")
+    args = parser.parse_args()
+    if args.json is not None:
+        sys.exit(run_sched_json(args.json))
+    sys.exit(run_sections())
 
 
 if __name__ == "__main__":

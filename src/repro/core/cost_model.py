@@ -145,6 +145,88 @@ class Breakdown:
                 self.t_f3 + self.t_b3 + self.t_update)
 
 
+def bw_matrix(net: Network) -> np.ndarray:
+    """``[3, 3]`` pairwise bandwidth table over :data:`WORKERS` (diagonal is
+    ``inf``: a worker talking to itself is free)."""
+    return np.array([[net.bw(a, b) for b in WORKERS] for a in WORKERS],
+                    np.float64)
+
+
+def t_total_batch(profile: HierProfile, net: Network,
+                  o_idx: np.ndarray, s_idx: np.ndarray, l_idx: np.ndarray,
+                  ms: np.ndarray, ml: np.ndarray, b: np.ndarray,
+                  origin: str = "device") -> np.ndarray:
+    """Vectorized :func:`t_total` over K candidate schedules.
+
+    Parameters
+    ----------
+    o_idx, s_idx, l_idx : ``[K]`` int — :data:`WIDX` indices of the workers
+        holding TASK O / S / L.
+    ms, ml : ``[K]`` int — cut points (``0 <= ms <= ml <= N``).
+    b : ``[K, 3]`` — integer batch split ``(b_o, b_s, b_l)``.
+    origin : worker the training data starts on.
+
+    Returns ``[K]`` exact ``T_total`` values.  Every arithmetic expression
+    mirrors the scalar :func:`t_total` term-for-term (same operation
+    order), so a lane equals the scalar evaluation of the same schedule
+    bit-for-bit — the batched scheduler's argmin agrees with the
+    reference scheduler's sequential min.
+    """
+    N = profile.num_layers
+    p = profile.prefix()
+    F, Bk, U, MPc = p["F"], p["Bk"], p["U"], p["MP"]
+    bwm = bw_matrix(net)
+    oi = WIDX[origin]
+    Q = profile.sample_bytes
+    bo = np.asarray(b[:, 0], np.float64)
+    bs = np.asarray(b[:, 1], np.float64)
+    bl = np.asarray(b[:, 2], np.float64)
+
+    bw_os = bwm[o_idx, s_idx]
+    bw_ol = bwm[o_idx, l_idx]
+
+    # --- communication pieces -------------------------------------------
+    def t_in(w_idx: np.ndarray, bb: np.ndarray) -> np.ndarray:
+        return np.where((bb == 0) | (w_idx == oi), 0.0,
+                        bb * Q / bwm[oi, w_idx])
+
+    t_in_o, t_in_s, t_in_l = t_in(o_idx, bo), t_in(s_idx, bs), t_in(l_idx, bl)
+    mo_s = profile.MO[np.maximum(ms, 1) - 1]   # MO_{m_s} (junk at ms == 0)
+    mo_l = profile.MO[np.maximum(ml, 1) - 1]
+    t_s_out = np.where((ms > 0) & (bs > 0), bs * mo_s / bw_os, 0.0)
+    t_l_out = np.where((ml > 0) & (bl > 0), bl * mo_l / bw_ol, 0.0)
+
+    # --- Eq. (5)/(6): layers 1..m_s on all three workers ----------------
+    t_f1 = np.maximum(np.maximum(t_in_o + bo * F[o_idx, ms],
+                                 t_in_s + bs * F[s_idx, ms] + t_s_out),
+                      t_in_l + bl * F[l_idx, ms])
+    t_b1 = np.maximum(np.maximum(bo * Bk[o_idx, ms],
+                                 bs * Bk[s_idx, ms] + t_s_out),
+                      bl * Bk[l_idx, ms])
+
+    # --- Eq. (7)/(8): layers m_s+1..m_l ---------------------------------
+    t_f2 = np.maximum((bo + bs) * (F[o_idx, ml] - F[o_idx, ms]),
+                      bl * (F[l_idx, ml] - F[l_idx, ms]) + t_l_out)
+    t_b2 = np.maximum((bo + bs) * (Bk[o_idx, ml] - Bk[o_idx, ms]),
+                      bl * (Bk[l_idx, ml] - Bk[l_idx, ms]) + t_l_out)
+
+    # --- Eq. (9)/(10): layers m_l+1..N with the full batch --------------
+    B = bo + bs + bl
+    t_f3 = B * (F[o_idx, N] - F[o_idx, ml])
+    t_b3 = B * (Bk[o_idx, N] - Bk[o_idx, ml])
+
+    # --- Eq. (11): weight update ----------------------------------------
+    t_upd_o = U[o_idx, N]
+    t_upd_s = np.where(bs > 0, U[s_idx, ms], 0.0)
+    t_upd_l = np.where(bl > 0, U[l_idx, ml], 0.0)
+    t_wg_s = np.where(bs > 0, 2.0 * MPc[ms] / bw_os, 0.0)
+    t_wg_l = np.where(bl > 0, 2.0 * MPc[ml] / bw_ol, 0.0)
+    t_update = np.maximum(np.maximum(t_upd_o, t_upd_s), t_upd_l) + \
+        np.maximum(t_wg_s, t_wg_l)
+
+    return t_f1 + t_b1 + t_f2 + t_b2 + t_f3 + t_b3 + t_update
+
+
 def t_input(profile: HierProfile, net: Network, worker: str, b: int,
             origin: str = "device") -> float:
     """``T_{j,input}``: latency for worker *j* to receive its ``b`` samples."""

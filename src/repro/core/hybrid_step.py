@@ -22,7 +22,7 @@ per-layer gradient exchange over the *shared* frontend only.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Callable, Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -120,6 +120,49 @@ def hybrid_step_from_schedule(model: LayeredModel, params: Params,
                               lr: float) -> Tuple[Params, jax.Array]:
     return hybrid_sgd_step(model, params, split_batch(x, y, sched),
                            sched.m_s, sched.m_l, lr)
+
+
+# ---------------------------------------------------------------------------
+# Compiled fast path.  The cuts and learning rate are static (they select
+# the program structure), the params are donated (the step consumes the old
+# consensus weights and returns the new ones), and compiled steps are cached
+# so a training loop that re-solves its schedule only pays retracing when
+# the cuts actually change.  The cache holds a strong reference to each
+# model (the closures need it), which is fine at "handful of CNNs" scale.
+# ---------------------------------------------------------------------------
+
+_JIT_CACHE: Dict[Tuple, Callable] = {}
+
+
+def jitted_hybrid_step(model: LayeredModel, m_s: int, m_l: int,
+                       lr: float) -> Callable:
+    """A compiled ``(params, batches) -> (new_params, loss)`` hybrid step
+    with static ``(m_s, m_l, lr)`` and donated ``params``.  jax.jit still
+    specializes on the batch-split shapes at first call, so one compiled
+    step serves every iteration with the same schedule."""
+    key = ("hybrid", id(model), int(m_s), int(m_l), float(lr))
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        def step(params: Params, batches):
+            return hybrid_sgd_step(model, params, batches, m_s, m_l, lr)
+        fn = jax.jit(step, donate_argnums=0)
+        _JIT_CACHE[key] = fn
+        _JIT_CACHE[key + ("model",)] = model  # keep id(model) valid
+    return fn
+
+
+def jitted_reference_step(model: LayeredModel, lr: float) -> Callable:
+    """Compiled ``(params, x, y) -> (new_params, loss)`` vanilla SGD step
+    (static ``lr``, donated ``params``)."""
+    key = ("reference", id(model), float(lr))
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        def step(params: Params, x: jax.Array, y: jax.Array):
+            return reference_sgd_step(model, params, x, y, lr)
+        fn = jax.jit(step, donate_argnums=0)
+        _JIT_CACHE[key] = fn
+        _JIT_CACHE[key + ("model",)] = model
+    return fn
 
 
 # ---------------------------------------------------------------------------

@@ -14,11 +14,15 @@ plenty. Exposed as :func:`linprog` with a scipy-like result object.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import List, Optional
 
 import numpy as np
 
-_EPS = 1e-9
+# Shared pivot/feasibility tolerance.  The batched engine
+# (:mod:`repro.core.batched_lp`) imports this so both backends make
+# identical accept/reject decisions at every pivot.
+EPS = 1e-9
+_EPS = EPS
 
 
 @dataclasses.dataclass
@@ -138,3 +142,19 @@ def linprog(c: np.ndarray,
         if basis[i] < n_total:
             x[basis[i]] = T2[i, -1]
     return LPResult(x[:n], float(c @ x[:n]), True, "optimal")
+
+
+def solve_many(c: np.ndarray,
+               A_ub: np.ndarray, b_ub: np.ndarray,
+               A_eq: np.ndarray, b_eq: np.ndarray) -> List[LPResult]:
+    """Solve a stack of identically-shaped LPs one by one.
+
+    Same call signature as :func:`repro.core.batched_lp.linprog_batch`
+    (``A_ub``: ``[K, m_ub, n]`` etc., ``c`` shared or ``[K, n]``); used as
+    the reference oracle in equivalence tests and benchmarks.
+    """
+    A_ub = np.asarray(A_ub, np.float64)
+    K = A_ub.shape[0]
+    c = np.broadcast_to(np.asarray(c, np.float64), (K, A_ub.shape[2]))
+    return [linprog(c[k], A_ub[k], b_ub[k], A_eq[k], b_eq[k])
+            for k in range(K)]

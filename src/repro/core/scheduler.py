@@ -3,9 +3,23 @@
 For every one of the 6 worker-role mappings and every cut pair
 ``(m_s, m_l)`` with ``0 <= m_s <= m_l <= N``, problem P1 (Eqs. 16-19) with the
 cuts fixed is an ILP.  Per §V we relax it to an LP in epigraph form (one
-epigraph variable per max-term of Eq. 12), solve with the two-phase simplex in
-:mod:`repro.core.lp`, round with the paper's largest-fraction rule, and keep
-the schedule with the smallest *exact* integer-evaluated ``T_total``.
+epigraph variable per max-term of Eq. 12), solve, round with the paper's
+largest-fraction rule, and keep the schedule with the smallest *exact*
+integer-evaluated ``T_total``.
+
+Two backends (DESIGN.md §Scheduler-engine):
+
+* ``backend="batched"`` (default) — builds the constraint tensors for *all*
+  ``(mapping, m_s, m_l)`` candidates in one shot from the profile's prefix
+  arrays, prunes candidates whose cut-constant lower bound (the ``T^3`` +
+  ``T_update`` terms, which the LP cannot change) already exceeds an
+  incumbent, solves the survivors as ONE stacked simplex call
+  (:mod:`repro.core.batched_lp`), rounds every batch split vectorized, and
+  evaluates the exact integer ``T_total`` of all survivors with
+  :func:`repro.core.cost_model.t_total_batch` before the argmin.
+* ``backend="reference"`` — the original sequential loop over scalar
+  two-phase-simplex calls.  Kept as the correctness oracle; the equivalence
+  suite asserts both backends return schedules with identical ``T_total``.
 """
 from __future__ import annotations
 
@@ -15,9 +29,15 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import batched_lp
 from repro.core import lp as lp_mod
 from repro.core.cost_model import (WIDX, WORKERS, Breakdown, HierProfile,
-                                   Network, Schedule, t_total)
+                                   Network, Schedule, bw_matrix, t_total,
+                                   t_total_batch)
+
+_LP_NUM_VARS = 7          # [b_o, b_s, b_l, t1, t2, t3, t4]
+_LP_NUM_UB = 12           # 10 epigraph arms + constraints (14)/(15)
+_LP_COST = np.array([0, 0, 0, 1, 1, 1, 1], np.float64)
 
 
 @dataclasses.dataclass
@@ -27,36 +47,81 @@ class SchedulerResult:
     t_total: float
     n_lp_solved: int
     search_log: List[Tuple[Schedule, float]]
+    n_candidates: int = 0
+    n_pruned: int = 0
 
 
 def _round_batch_split(b_real: np.ndarray, B: int,
                        allowed: np.ndarray) -> np.ndarray:
-    """Paper §V rounding: floor everything, then hand the missing units to the
-    entries with the largest fractional parts (at most two steps).  Entries
-    with ``allowed == False`` (their ``m`` is 0) never receive extra units.
+    """Paper §V rounding: floor everything, then hand the missing units to
+    the entries with the largest fractional parts.  Entries with
+    ``allowed == False`` (their ``m`` is 0) are forced to exactly 0 — they
+    may neither keep an integer part nor receive extra units.  Any residue
+    the largest-fraction pass cannot place lands on ``b_o`` (always
+    allowed); a floor *overshoot* (LP numerics handing out more than ``B``
+    units) is stripped from the largest entries without driving any entry
+    below zero, so the result always satisfies ``sum == B`` and ``>= 0``.
     """
     b_real = np.clip(np.asarray(b_real, np.float64), 0.0, None)
+    allowed = np.asarray(allowed, bool)
+    b_real = np.where(allowed, b_real, 0.0)
     ints = np.floor(b_real + 1e-9).astype(np.int64)
-    fracs = b_real - ints
-    fracs = np.where(allowed, fracs, -1.0)  # never bump disallowed entries
+    fracs = np.where(allowed, b_real - ints, -1.0)
     deficit = int(B - ints.sum())
-    order = np.argsort(-fracs)
     out = ints.copy()
-    for j in range(len(out)):
+    for idx in np.argsort(-fracs, kind="stable"):
         if deficit <= 0:
             break
-        idx = order[j]
-        if not allowed[idx] and idx != 0:
+        if not allowed[idx]:
             continue
         out[idx] += 1
         deficit -= 1
-    # Degenerate LP numerics: dump any remainder on b_o (always allowed).
-    if deficit > 0:
+    if deficit > 0:  # more missing units than entries: dump on b_o
         out[0] += deficit
-    if deficit < 0:  # floor overshoot cannot happen, but stay safe
-        out[0] += deficit
+        deficit = 0
+    while deficit < 0:  # overshoot: strip from the largest entries
+        idx = int(np.argmax(out))
+        if out[idx] <= 0:
+            break
+        out[idx] -= 1
+        deficit += 1
     return out
 
+
+def _round_batch_split_batch(b_real: np.ndarray, B: int,
+                             allowed: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`_round_batch_split` over ``[K, 3]`` splits.
+    Semantics match the scalar rule exactly (same stable largest-fraction
+    order, same residue handling), so both backends round identically."""
+    K = b_real.shape[0]
+    ar = np.arange(K)
+    b = np.clip(np.asarray(b_real, np.float64), 0.0, None)
+    b = np.where(allowed, b, 0.0)
+    ints = np.floor(b + 1e-9).astype(np.int64)
+    fracs = np.where(allowed, b - ints, -1.0)
+    deficit = B - ints.sum(axis=1)
+    out = ints.copy()
+    order = np.argsort(-fracs, axis=1, kind="stable")
+    for j in range(order.shape[1]):  # one potential +1 per entry, like scalar
+        idx = order[:, j]
+        bump = allowed[ar, idx] & (deficit > 0)
+        out[ar, idx] += bump
+        deficit -= bump
+    out[:, 0] += np.maximum(deficit, 0)
+    deficit = np.minimum(deficit, 0)
+    while (deficit < 0).any():
+        idx = np.argmax(out, axis=1)
+        strip = (deficit < 0) & (out[ar, idx] > 0)
+        if not strip.any():
+            break
+        out[ar, idx] -= strip
+        deficit += strip
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Reference backend: sequential scalar LPs (the seed implementation).
+# ---------------------------------------------------------------------------
 
 def _solve_cut_lp(profile: HierProfile, net: Network, wo: str, ws: str,
                   wl: str, m_s: int, m_l: int, B: int,
@@ -80,8 +145,7 @@ def _solve_cut_lp(profile: HierProfile, net: Network, wo: str, ws: str,
     mo_s = profile.MO[m_s - 1] / bw_os if m_s > 0 else 0.0
     mo_l = profile.MO[m_l - 1] / bw_ol if m_l > 0 else 0.0
 
-    nv = 7
-    c = np.array([0, 0, 0, 1, 1, 1, 1], np.float64)
+    nv = _LP_NUM_VARS
     A_ub, b_ub = [], []
 
     def ub(coef_b, t_idx):  # coef_b @ [b_o,b_s,b_l] - t <= 0
@@ -112,17 +176,16 @@ def _solve_cut_lp(profile: HierProfile, net: Network, wo: str, ws: str,
     A_eq = np.zeros((1, nv)); A_eq[0, :3] = 1.0
     b_eq = np.array([float(B)])
 
-    res = lp_mod.linprog(c, np.array(A_ub), np.array(b_ub), A_eq, b_eq)
+    res = lp_mod.linprog(_LP_COST, np.array(A_ub), np.array(b_ub), A_eq, b_eq)
     if not res.success:
         return None
     return res.x[:3]
 
 
-def solve(profile: HierProfile, net: Network, B: int,
-          origin: str = "device",
-          workers: Tuple[str, ...] = WORKERS,
-          keep_log: bool = False) -> SchedulerResult:
-    """Algorithm 1: enumerate mappings x cuts, LP + round, return the best."""
+def _solve_reference(profile: HierProfile, net: Network, B: int,
+                     origin: str, workers: Tuple[str, ...],
+                     keep_log: bool) -> SchedulerResult:
+    """Algorithm 1, one scalar LP at a time (the correctness oracle)."""
     N = profile.num_layers
     best: Optional[Tuple[Schedule, Breakdown]] = None
     n_lp = 0
@@ -147,4 +210,161 @@ def solve(profile: HierProfile, net: Network, B: int,
     assert best is not None
     return SchedulerResult(schedule=best[0], breakdown=best[1],
                            t_total=best[1].total, n_lp_solved=n_lp,
-                           search_log=log)
+                           search_log=log, n_candidates=n_lp, n_pruned=0)
+
+
+# ---------------------------------------------------------------------------
+# Batched backend: one stacked LP over all surviving candidates.
+# ---------------------------------------------------------------------------
+
+def _candidate_grid(N: int, workers: Tuple[str, ...]
+                    ) -> Tuple[np.ndarray, ...]:
+    """All ``(mapping, m_s, m_l)`` candidates in the reference backend's
+    enumeration order, as flat index arrays."""
+    maps = list(itertools.permutations(workers, 3))
+    ms_g, ml_g = np.triu_indices(N + 1)       # row-major == m_s outer loop
+    P = ms_g.shape[0]
+    o_idx = np.repeat([WIDX[m[0]] for m in maps], P)
+    s_idx = np.repeat([WIDX[m[1]] for m in maps], P)
+    l_idx = np.repeat([WIDX[m[2]] for m in maps], P)
+    ms = np.tile(ms_g, len(maps))
+    ml = np.tile(ml_g, len(maps))
+    return o_idx, s_idx, l_idx, ms, ml
+
+
+def _build_lp_stack(profile: HierProfile, net: Network, o_idx: np.ndarray,
+                    s_idx: np.ndarray, l_idx: np.ndarray, ms: np.ndarray,
+                    ml: np.ndarray, B: int, origin: str
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                               np.ndarray]:
+    """Constraint tensors of the per-cut LP for all K candidates at once.
+
+    Row layout matches :func:`_solve_cut_lp` one-to-one.
+    """
+    p = profile.prefix()
+    F, Bk = p["F"], p["Bk"]
+    K = o_idx.shape[0]
+    Q = profile.sample_bytes
+    bwm = bw_matrix(net)
+    oi = WIDX[origin]
+    bw_os = bwm[o_idx, s_idx]
+    bw_ol = bwm[o_idx, l_idx]
+    in_o = np.where(o_idx == oi, 0.0, Q / bwm[oi, o_idx])
+    in_s = np.where(s_idx == oi, 0.0, Q / bwm[oi, s_idx])
+    in_l = np.where(l_idx == oi, 0.0, Q / bwm[oi, l_idx])
+    mo_s = np.where(ms > 0, profile.MO[np.maximum(ms, 1) - 1] / bw_os, 0.0)
+    mo_l = np.where(ml > 0, profile.MO[np.maximum(ml, 1) - 1] / bw_ol, 0.0)
+
+    A_ub = np.zeros((K, _LP_NUM_UB, _LP_NUM_VARS))
+    b_ub = np.zeros((K, _LP_NUM_UB))
+    # t1 >= each arm of Eq. (5); t2 >= each arm of Eq. (6).
+    A_ub[:, 0, 0] = in_o + F[o_idx, ms]
+    A_ub[:, 1, 1] = in_s + F[s_idx, ms] + mo_s
+    A_ub[:, 2, 2] = in_l + F[l_idx, ms]
+    A_ub[:, 3, 0] = Bk[o_idx, ms]
+    A_ub[:, 4, 1] = Bk[s_idx, ms] + mo_s
+    A_ub[:, 5, 2] = Bk[l_idx, ms]
+    A_ub[:, :3, 3] = -1.0
+    A_ub[:, 3:6, 4] = -1.0
+    # t3 >= each arm of Eq. (7); t4 >= each arm of Eq. (8).
+    dF_o = F[o_idx, ml] - F[o_idx, ms]
+    dBk_o = Bk[o_idx, ml] - Bk[o_idx, ms]
+    A_ub[:, 6, 0] = dF_o
+    A_ub[:, 6, 1] = dF_o
+    A_ub[:, 7, 2] = (F[l_idx, ml] - F[l_idx, ms]) + mo_l
+    A_ub[:, 8, 0] = dBk_o
+    A_ub[:, 8, 1] = dBk_o
+    A_ub[:, 9, 2] = (Bk[l_idx, ml] - Bk[l_idx, ms]) + mo_l
+    A_ub[:, 6:8, 5] = -1.0
+    A_ub[:, 8:10, 6] = -1.0
+    # Constraints (14)/(15): b_s <= m_s*B, b_l <= m_l*B.
+    A_ub[:, 10, 1] = 1.0
+    b_ub[:, 10] = ms.astype(np.float64) * B
+    A_ub[:, 11, 2] = 1.0
+    b_ub[:, 11] = ml.astype(np.float64) * B
+    # Constraint (17): b_o + b_s + b_l = B.
+    A_eq = np.zeros((K, 1, _LP_NUM_VARS))
+    A_eq[:, 0, :3] = 1.0
+    b_eq = np.full((K, 1), float(B))
+    return A_ub, b_ub, A_eq, b_eq
+
+
+def _solve_batched(profile: HierProfile, net: Network, B: int, origin: str,
+                   workers: Tuple[str, ...], keep_log: bool,
+                   prune: bool) -> SchedulerResult:
+    N = profile.num_layers
+    p = profile.prefix()
+    F, Bk, U = p["F"], p["Bk"], p["U"]
+    o_idx, s_idx, l_idx, ms, ml = _candidate_grid(N, workers)
+    K = o_idx.shape[0]
+
+    # Dominance pruning: the T^3 + T_update terms of Eq. (12) do not depend
+    # on the batch split, so  B*(F_o[N]-F_o[ml]) + B*(Bk_o[N]-Bk_o[ml]) +
+    # U_o[N]  lower-bounds any schedule with these cuts.  Candidates whose
+    # bound already exceeds the best ``(m_s = m_l = 0)`` schedule (whose LP
+    # is trivial: everything on worker_o) cannot win — skip their LPs.
+    keep = np.ones(K, bool)
+    n_pruned = 0
+    if prune:
+        Bf = float(B)
+        const_lb = Bf * (F[o_idx, N] - F[o_idx, ml]) + \
+            Bf * (Bk[o_idx, N] - Bk[o_idx, ml]) + U[o_idx, N]
+        trivial = (ms == 0) & (ml == 0)
+        b_triv = np.zeros((int(trivial.sum()), 3), np.int64)
+        b_triv[:, 0] = B
+        incumbent = t_total_batch(profile, net, o_idx[trivial],
+                                  s_idx[trivial], l_idx[trivial],
+                                  ms[trivial], ml[trivial], b_triv,
+                                  origin).min()
+        keep = ~(const_lb > incumbent)
+        n_pruned = int(K - keep.sum())
+
+    ko, ks, kl = o_idx[keep], s_idx[keep], l_idx[keep]
+    kms, kml = ms[keep], ml[keep]
+    A_ub, b_ub, A_eq, b_eq = _build_lp_stack(profile, net, ko, ks, kl,
+                                             kms, kml, B, origin)
+    res = batched_lp.linprog_batch(_LP_COST, A_ub, b_ub, A_eq, b_eq)
+
+    ok = res.success
+    allowed = np.stack([np.ones_like(kms, bool), kms > 0, kml > 0], axis=1)
+    b_int = _round_batch_split_batch(res.x[:, :3], B, allowed)
+    totals = t_total_batch(profile, net, ko, ks, kl, kms, kml, b_int, origin)
+    totals = np.where(ok, totals, np.inf)
+    assert ok.any(), "every per-cut LP failed — inconsistent profile?"
+    win = int(np.argmin(totals))  # first min == reference's sequential <
+
+    inv = {i: w for w, i in WIDX.items()}
+    sched = Schedule(inv[int(ko[win])], inv[int(ks[win])], inv[int(kl[win])],
+                     int(kms[win]), int(kml[win]),
+                     int(b_int[win, 0]), int(b_int[win, 1]),
+                     int(b_int[win, 2]))
+    bd = t_total(profile, net, sched, origin)
+    log: List[Tuple[Schedule, float]] = []
+    if keep_log:
+        for k in np.nonzero(ok)[0]:
+            log.append((Schedule(
+                inv[int(ko[k])], inv[int(ks[k])], inv[int(kl[k])],
+                int(kms[k]), int(kml[k]), int(b_int[k, 0]),
+                int(b_int[k, 1]), int(b_int[k, 2])), float(totals[k])))
+    return SchedulerResult(schedule=sched, breakdown=bd, t_total=bd.total,
+                           n_lp_solved=int(keep.sum()), search_log=log,
+                           n_candidates=K, n_pruned=n_pruned)
+
+
+def solve(profile: HierProfile, net: Network, B: int,
+          origin: str = "device",
+          workers: Tuple[str, ...] = WORKERS,
+          keep_log: bool = False,
+          backend: str = "batched",
+          prune: bool = True) -> SchedulerResult:
+    """Algorithm 1: enumerate mappings x cuts, LP + round, return the best.
+
+    ``backend="batched"`` (default) solves all candidate LPs as one stacked
+    simplex; ``backend="reference"`` is the sequential scalar oracle.
+    ``prune`` toggles the cut-constant dominance bound (batched only).
+    """
+    if backend == "reference":
+        return _solve_reference(profile, net, B, origin, workers, keep_log)
+    if backend != "batched":
+        raise ValueError(f"unknown scheduler backend: {backend!r}")
+    return _solve_batched(profile, net, B, origin, workers, keep_log, prune)

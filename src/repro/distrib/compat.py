@@ -1,0 +1,80 @@
+"""jax version compatibility: ambient mesh context + shard_map.
+
+The distributed runtime is written against the modern jax surface
+(``jax.set_mesh`` ambient-mesh context, ``jax.shard_map`` with
+``axis_names``/``check_vma``).  Older releases (e.g. 0.4.x, the pinned
+container toolchain) have neither: the context manager does not exist
+and shard_map lives in ``jax.experimental.shard_map`` with an explicit
+``mesh`` argument, ``check_rep`` instead of ``check_vma``, and an
+``auto`` set instead of ``axis_names``.  This module folds both surfaces
+into one:
+
+* :func:`set_mesh` — delegates to ``jax.set_mesh`` when present;
+  otherwise maintains a module-level mesh stack that :func:`shard_map`
+  consults, so ``with set_mesh(mesh): jit(step)(...)`` works on both.
+* :func:`shard_map` — new-API keyword shape; on old jax it resolves the
+  mesh (argument or ambient stack), maps ``check_vma -> check_rep`` and
+  ``axis_names -> auto`` (the complement: axes *not* named manual stay
+  automatic).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+_MESH_STACK = []
+
+
+def current_mesh():
+    """The innermost mesh entered via :func:`set_mesh` (old-jax path),
+    or ``None``."""
+    return _MESH_STACK[-1] if _MESH_STACK else None
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """Ambient-mesh context that works on every supported jax."""
+    if hasattr(jax, "set_mesh"):
+        with jax.set_mesh(mesh):
+            yield mesh
+        return
+    _MESH_STACK.append(mesh)
+    try:
+        yield mesh
+    finally:
+        _MESH_STACK.pop()
+
+
+def shard_map(f, *, in_specs, out_specs, axis_names=None, check_vma=True,
+              mesh=None):
+    """``jax.shard_map`` with a fallback to the experimental API.
+
+    ``axis_names`` is the set of *manual* axes (new-jax meaning); on old
+    jax the remaining mesh axes are passed as ``auto``.  On old jax a
+    mesh must be resolvable — pass ``mesh=`` or enter :func:`set_mesh`.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = dict(in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        if mesh is not None:
+            kwargs["mesh"] = mesh
+        return jax.shard_map(f, **kwargs)
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+    m = mesh if mesh is not None else current_mesh()
+    if m is None:
+        raise ValueError(
+            "this jax has no ambient-mesh support; pass mesh= or wrap the "
+            "call in repro.distrib.compat.set_mesh(mesh)")
+    # Old jax's partial-auto shard_map (auto=...) trips an XLA
+    # IsManualSubgroup CHECK on this pattern, so fall back to the mature
+    # fully-manual form: axes outside ``axis_names`` become manual but
+    # unpartitioned (specs never mention them), i.e. the body computes
+    # replicated over them instead of XLA auto-sharding it.  Semantics
+    # match; only intra-body compute layout differs.
+    return _shard_map(f, mesh=m, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

@@ -30,6 +30,28 @@ _DEF_RE = re.compile(
     r"((?:\((?:[^()]|\([^()]*\))*\))|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)")
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
 _OPERAND_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+_SIGIL_NAME_RE = re.compile(r"%([\w.\-]+)")
+_BARE_OPERAND_RE = re.compile(
+    r"(?:[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?\s+)?%?([\w.\-]+)")
+
+
+def _operand_names(blob: str) -> list:
+    """Instruction names referenced in an operand list ``blob``.
+
+    Splitting the blob on commas breaks inside shape dims
+    (``f32[128,64]`` -> ``f32[128``), so prefer the ``%``-sigil form
+    every known dump uses; fall back to comma tokens for sigil-free
+    dumps (whose shapes then contain no commas to trip on).
+    """
+    names = _SIGIL_NAME_RE.findall(blob)
+    if names:
+        return names
+    out = []
+    for tok in blob.split(","):
+        nm = _BARE_OPERAND_RE.match(tok.strip())
+        if nm:
+            out.append(nm.group(1))
+    return out
 
 
 def _shape_bytes(type_str: str) -> int:
@@ -88,12 +110,9 @@ def collective_bytes(hlo_text: str) -> CollectiveStats:
         pm = _OPERAND_RE.search(rest)
         nbytes = 0
         if pm:
-            for tok in pm.group(1).split(","):
-                tok = tok.strip()
-                nm = re.match(r"(?:[a-z0-9]+\[[\d,]*\]\{[^}]*\}\s+)?%?"
-                              r"([\w.\-]+)", tok)
-                if nm and nm.group(1) in sizes:
-                    nbytes += sizes[nm.group(1)]
+            for nm in _operand_names(pm.group(1)):
+                if nm in sizes:
+                    nbytes += sizes[nm]
         if nbytes == 0:
             nbytes = sizes.get(name.lstrip("%"), 0)
         bytes_by[base] = bytes_by.get(base, 0) + nbytes
@@ -194,14 +213,7 @@ class HloCostWalk:
             opm = re.match(r"\s*([\w\-]+)", rest)
             kind = opm.group(1) if opm else "?"
             pm = _OPERAND_RE.search(rest)
-            operands = []
-            if pm:
-                for tok in pm.group(1).split(","):
-                    tok = tok.strip()
-                    nm = re.match(r"(?:[a-z0-9]+\[[\d,]*\]\{[^}]*\}\s+)?%?"
-                                  r"([\w.\-]+)", tok)
-                    if nm:
-                        operands.append(nm.group(1))
+            operands = _operand_names(pm.group(1)) if pm else []
             callees = []
             cond = None
             for key, val in _CALLEE_SINGLE_RE.findall(rest):

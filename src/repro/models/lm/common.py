@@ -18,13 +18,35 @@ import numpy as np
 Params = Dict[str, Any]
 
 
+def ambient_abstract_mesh():
+    """The mesh currently in scope, or ``None``.
+
+    ``jax.sharding.get_abstract_mesh`` only exists in newer jax releases;
+    older ones keep it in ``jax._src.mesh`` (where the empty sentinel is not
+    always an ``AbstractMesh``).  Normalize every "no usable mesh" shape to
+    ``None`` so callers need a single check.
+    """
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except AttributeError:
+        try:
+            from jax._src import mesh as _mesh_lib
+            mesh = _mesh_lib.get_abstract_mesh()
+        except (ImportError, AttributeError):
+            return None
+    if mesh is None or getattr(mesh, "empty", False) or \
+            not getattr(mesh, "axis_names", None):
+        return None
+    return mesh
+
+
 def shard_hint(x: jax.Array, *axes) -> jax.Array:
     """``with_sharding_constraint`` that degrades to a no-op when no mesh
     is in scope (CPU smoke tests) or when an axis name is absent from the
     ambient mesh (single-pod vs multi-pod).  ``axes``: one entry per dim,
     each a mesh-axis name, a tuple of names, or None."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or getattr(mesh, "empty", False) or not mesh.axis_names:
+    mesh = ambient_abstract_mesh()
+    if mesh is None:
         return x
     from jax.sharding import PartitionSpec
 

@@ -117,7 +117,7 @@ def run_hier_loop(cfg: HierLoopConfig, model, profile, net, data,
     import copy
 
     from repro.core.cost_model import t_total
-    from repro.core.hybrid_step import hybrid_step_from_schedule
+    from repro.core.hybrid_step import jitted_hybrid_step, split_batch
     from repro.core.scheduler import solve
 
     prof = copy.deepcopy(profile)
@@ -149,9 +149,12 @@ def run_hier_loop(cfg: HierLoopConfig, model, profile, net, data,
             true_prof.L_u[i] *= factor
         wall += t_total(true_prof, net, sched).total
         b = data.batch(step)
-        params, loss = hybrid_step_from_schedule(
-            model, params, jax.numpy.asarray(b["x"]),
-            jax.numpy.asarray(b["labels"]), sched, cfg.lr)
+        # Cached compiled step: static (m_s, m_l, lr), donated params — a
+        # reschedule that keeps the cuts reuses the same executable.
+        step_fn = jitted_hybrid_step(model, sched.m_s, sched.m_l, cfg.lr)
+        params, loss = step_fn(params, split_batch(
+            jax.numpy.asarray(b["x"]), jax.numpy.asarray(b["labels"]),
+            sched))
         losses.append(float(loss))
         if log and (step + 1) % 10 == 0:
             log(f"hier step {step+1}: loss={losses[-1]:.4f} "

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distrib import compat
 from repro.distrib.tiered_sync import TierAssignment, tiered_grad_sync
 from repro.optim.optimizers import Optimizer
 
@@ -113,7 +114,7 @@ def make_train_step(model, optimizer: Optimizer, *,
         # start as unvarying constants (loss chunks, GLA states, grad
         # accumulators) — strict varying-manual-axis typing would need a
         # pcast at every one of them.
-        loss, grads = jax.shard_map(
+        loss, grads = compat.shard_map(
             per_pod,
             in_specs=(P(), P("pod"), P()),
             out_specs=(P(), P()),

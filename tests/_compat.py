@@ -1,0 +1,83 @@
+"""Optional-import shim for :mod:`hypothesis`.
+
+The property tests are written against the real hypothesis API, but the
+library is not part of the baked container image.  Importing from here
+instead of from ``hypothesis`` keeps the suite collectable everywhere:
+
+* hypothesis installed  -> re-export the real ``given``/``settings``/``st``.
+* hypothesis missing    -> a minimal deterministic fallback that draws
+  ``max_examples`` pseudo-random examples per test from a fixed seed.  It
+  covers exactly the strategy surface the suite uses (``integers``,
+  ``floats``, ``sampled_from``, ``lists`` and ``.map``) — no shrinking, no
+  database, but the invariants still get exercised on a clean environment.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # fallback mode
+    import random
+    from typing import Any, Callable, List
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A draw function plus hypothesis' ``.map`` combinator."""
+
+        def __init__(self, draw: Callable[[random.Random], Any]) -> None:
+            self._draw = draw
+
+        def draw(self, rng: random.Random) -> Any:
+            return self._draw(rng)
+
+        def map(self, fn: Callable[[Any], Any]) -> "_Strategy":
+            return _Strategy(lambda rng: fn(self._draw(rng)))
+
+    class st:  # noqa: N801 - mimics ``hypothesis.strategies`` module name
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value: float, max_value: float) -> _Strategy:
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements) -> _Strategy:
+            pool = list(elements)
+            return _Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+        @staticmethod
+        def lists(elements: _Strategy, min_size: int = 0,
+                  max_size: int = 10) -> _Strategy:
+            def draw(rng: random.Random) -> List[Any]:
+                size = rng.randint(min_size, max_size)
+                return [elements.draw(rng) for _ in range(size)]
+            return _Strategy(draw)
+
+    def settings(max_examples: int = 20, deadline=None, **_ignored):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+        def deco(fn):
+            # No functools.wraps: pytest must see a 0-arg signature, not the
+            # strategy parameters (it would look for fixtures named like
+            # them).  Real hypothesis strips them the same way.
+            def wrapper():
+                n = getattr(wrapper, "_compat_max_examples", 20)
+                for example in range(n):
+                    rng = random.Random(0x5EED + 7919 * example)
+                    drawn = [s.draw(rng) for s in arg_strategies]
+                    kdrawn = {k: s.draw(rng)
+                              for k, s in kw_strategies.items()}
+                    fn(*drawn, **kdrawn)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

@@ -1,0 +1,160 @@
+"""Equivalence suite: batched simplex / batched scheduler vs the scalar
+reference oracle, across randomized profiles, networks, origins and sizes."""
+import numpy as np
+import pytest
+
+from tests._compat import given, settings, st
+
+from repro.core import batched_lp, scheduler
+from repro.core import lp as lp_mod
+from repro.core.cost_model import HierProfile, Network, t_total
+
+
+def random_profile(n_layers, seed, sample_bytes=2000.0):
+    rng = np.random.default_rng(seed)
+    return HierProfile(
+        layer_names=tuple(f"l{i}" for i in range(n_layers)),
+        L_f=rng.uniform(1e-4, 1e-2, (3, n_layers)),
+        L_b=rng.uniform(1e-4, 2e-2, (3, n_layers)),
+        L_u=rng.uniform(1e-5, 1e-3, (3, n_layers)),
+        MP=rng.uniform(1e3, 1e6, n_layers),
+        MO=rng.uniform(1e2, 1e5, n_layers),
+        sample_bytes=sample_bytes,
+    )
+
+
+def random_network(seed):
+    rng = np.random.default_rng(seed ^ 0xBEEF)
+    return Network(bw_de=rng.uniform(1e5, 1e7),
+                   bw_ec=rng.uniform(1e5, 1e7))
+
+
+# ---------------------------------------------------------------------------
+# LP layer: linprog_batch vs a loop of scalar linprog calls.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_linprog_batch_matches_scalar_on_random_stacks(seed):
+    rng = np.random.default_rng(seed)
+    K, n = 20, 5
+    A_ub = np.zeros((K, 6, n))
+    b_ub = np.zeros((K, 6))
+    for k in range(K):
+        for r in range(6):
+            A_ub[k, r, rng.integers(0, 3)] = rng.uniform(0.0, 2.0)
+            A_ub[k, r, 3 + r % 2] = -1.0
+        # a couple of box constraints with random (possibly tight) rhs
+        b_ub[k, rng.integers(0, 6)] = rng.uniform(-0.5, 4.0)
+    A_eq = np.zeros((K, 1, n))
+    A_eq[:, 0, :3] = 1.0
+    b_eq = np.full((K, 1), 8.0)
+    c = np.array([0.0, 0.0, 0.0, 1.0, 1.0])
+
+    ref = lp_mod.solve_many(c, A_ub, b_ub, A_eq, b_eq)
+    bat = batched_lp.linprog_batch(c, A_ub, b_ub, A_eq, b_eq)
+    for k, r in enumerate(ref):
+        assert bool(bat.success[k]) == r.success, (k, r.status)
+        if r.success:
+            assert bat.fun[k] == pytest.approx(r.fun, rel=1e-9, abs=1e-9)
+            np.testing.assert_allclose(bat.x[k], r.x, atol=1e-9)
+
+
+def test_linprog_batch_mixed_statuses():
+    """Infeasible / optimal / degenerate lanes in one stack."""
+    A_ub = np.zeros((3, 2, 2))
+    b_ub = np.zeros((3, 2))
+    A_eq = np.zeros((3, 1, 2))
+    b_eq = np.zeros((3, 1))
+    # lane 0: x0 <= -1 with x >= 0 -> infeasible
+    A_ub[0, 0] = [1, 0]; b_ub[0, 0] = -1.0
+    A_eq[0, 0] = [0, 1]; b_eq[0, 0] = 1.0
+    # lane 1: min x+y s.t. x+y = 3
+    A_eq[1, 0] = [1, 1]; b_eq[1, 0] = 3.0
+    # lane 2: fully degenerate at the origin
+    A_ub[2, 0] = [1, 0]; A_ub[2, 1] = [0, 1]
+    A_eq[2, 0] = [1, 1]
+    res = batched_lp.linprog_batch(np.array([1.0, 1.0]),
+                                   A_ub, b_ub, A_eq, b_eq)
+    assert list(res.success) == [False, True, True]
+    assert res.status[0] == batched_lp.INFEASIBLE
+    assert res.fun[1] == pytest.approx(3.0, abs=1e-9)
+    assert res.fun[2] == pytest.approx(0.0, abs=1e-9)
+
+
+def test_linprog_batch_frozen_lanes_stay_intact():
+    """A lane that converges in 1 pivot must not be perturbed while a
+    slower lane keeps iterating (converged-batch freezing)."""
+    # lane 0 converges immediately (objective already optimal at slack
+    # basis); lane 1 needs several pivots.
+    A_ub = np.zeros((2, 3, 3))
+    b_ub = np.ones((2, 3))
+    A_eq = np.zeros((2, 0, 3))
+    b_eq = np.zeros((2, 0))
+    A_ub[0] = np.eye(3)
+    A_ub[1] = [[1, 1, 0], [0, 1, 1], [1, 0, 1]]
+    b_ub[1] = [4.0, 6.0, 5.0]
+    c = np.array([[1.0, 1.0, 1.0], [-1.0, -2.0, -3.0]])
+    res = batched_lp.linprog_batch(c, A_ub, b_ub, A_eq, b_eq)
+    ref0 = lp_mod.linprog(c[0], A_ub[0], b_ub[0])
+    ref1 = lp_mod.linprog(c[1], A_ub[1], b_ub[1])
+    assert res.success.all()
+    assert res.fun[0] == pytest.approx(ref0.fun, abs=1e-9)
+    assert res.fun[1] == pytest.approx(ref1.fun, abs=1e-9)
+    np.testing.assert_allclose(res.x[0], ref0.x, atol=1e-9)
+    np.testing.assert_allclose(res.x[1], ref1.x, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler layer: batched backend == reference backend.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_layers", [3, 8, 16])
+def test_backends_equivalent_across_profiles(n_layers):
+    """Identical t_total (and the same schedule) on randomized profiles,
+    networks, batch sizes and data origins."""
+    n_cases = 6 if n_layers < 16 else 3
+    for seed in range(n_cases):
+        prof = random_profile(n_layers, seed=seed)
+        net = random_network(seed)
+        B = int(np.random.default_rng(seed).integers(8, 65))
+        origin = ("device", "edge", "cloud")[seed % 3]
+        ref = scheduler.solve(prof, net, B, origin=origin,
+                              backend="reference", keep_log=True)
+        bat = scheduler.solve(prof, net, B, origin=origin, keep_log=True)
+        assert bat.t_total == ref.t_total, (n_layers, seed, origin)
+        assert bat.schedule == ref.schedule, (n_layers, seed, origin)
+        # LP optima agree to tolerance on every candidate both solved
+        ref_log = {(s.worker_o, s.worker_s, s.worker_l, s.m_s, s.m_l): v
+                   for s, v in ref.search_log}
+        for s, v in bat.search_log:
+            key = (s.worker_o, s.worker_s, s.worker_l, s.m_s, s.m_l)
+            assert v == pytest.approx(ref_log[key], rel=1e-9, abs=1e-12)
+
+
+def test_pruning_never_changes_the_answer():
+    for seed in range(5):
+        prof = random_profile(8, seed=seed + 100)
+        net = random_network(seed + 100)
+        full = scheduler.solve(prof, net, 32, prune=False)
+        pruned = scheduler.solve(prof, net, 32, prune=True)
+        assert pruned.t_total == full.t_total
+        assert pruned.schedule == full.schedule
+        assert pruned.n_lp_solved <= full.n_lp_solved
+
+
+def test_batched_result_metadata():
+    prof = random_profile(5, seed=7)
+    res = scheduler.solve(prof, random_network(7), 16)
+    K = 6 * (5 + 1) * (5 + 2) // 2
+    assert res.n_candidates == K
+    assert res.n_lp_solved + res.n_pruned == K
+    s = res.schedule
+    assert s.b_o + s.b_s + s.b_l == 16
+    assert t_total(prof, random_network(7), s).total == res.t_total
+
+
+def test_unknown_backend_rejected():
+    prof = random_profile(3, seed=0)
+    with pytest.raises(ValueError):
+        scheduler.solve(prof, random_network(0), 8, backend="cplex")

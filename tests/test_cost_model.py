@@ -3,7 +3,7 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._compat import given, settings, st
 
 from repro.core import baselines, scheduler
 from repro.core.cost_model import (HierProfile, Network, Schedule, t_total)

@@ -2,8 +2,7 @@
 shard-count invariance (elastic rescaling preserves the global batch),
 stateless skip-ahead."""
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests._compat import given, settings, st
 
 from repro.configs.base import ShapeSpec
 from repro.data.pipeline import (SyntheticImages, SyntheticTokens,

@@ -9,15 +9,14 @@ import textwrap
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from tests._compat import given, settings, st
 
 from repro.distrib.sharding import batch_spec, cache_spec, param_spec
 
 # An AbstractMesh carries axis names/sizes without real devices — the
 # sharding rules only read those.
-MESH = jax.sharding.AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-SINGLE = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+MESH = jax.sharding.AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
+SINGLE = jax.sharding.AbstractMesh((("data", 16), ("model", 16)))
 
 
 @settings(max_examples=80, deadline=None)
@@ -63,7 +62,11 @@ def _run_subprocess(code: str):
         [sys.executable, "-c", textwrap.dedent(code)],
         capture_output=True, text=True, timeout=540,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root"}, cwd="/root/repo")
+             "HOME": "/root",
+             # the image ships libtpu: without an explicit platform pin
+             # jax probes for TPU hardware for minutes before falling
+             # back to CPU (the parent test env pins it too).
+             "JAX_PLATFORMS": "cpu"}, cwd="/root/repo")
     assert out.returncode == 0, out.stdout + "\n" + out.stderr
     return out.stdout
 
@@ -76,6 +79,7 @@ def test_tiered_sync_equivalence_multidev():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.distrib import compat
         from repro.distrib.tiered_sync import (choose_tiers,
                                                tiered_grad_sync)
         mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
@@ -90,12 +94,12 @@ def test_tiered_sync_equivalence_multidev():
             # check_vma=False as in the production step: the compressed
             # path's output is replicated by construction (identical
             # all-gather + arithmetic on every pod) but not provably so.
-            return jax.shard_map(per_pod, in_specs=(P("pod"), P()),
+            return compat.shard_map(per_pod, in_specs=(P("pod"), P()),
                                  out_specs=P(), axis_names={"pod"},
                                  check_vma=False)(g, key)
 
         key = jax.random.PRNGKey(42)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             plain = jax.jit(lambda g, k: sync(g, k, None))(grads, key)
             want = jax.tree.map(
                 lambda g: g.reshape(2, 4, *g.shape[1:]).mean(0), grads)
@@ -127,6 +131,7 @@ def test_dryrun_micro_cell():
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.configs import get_arch
+        from repro.distrib import compat
         from repro.distrib import (batch_shardings, choose_tiers,
                                    opt_state_shardings, param_shardings)
         from repro.models.lm.model import build_model
@@ -150,7 +155,7 @@ def test_dryrun_micro_cell():
                              compute_seconds=1e-9)
         step = make_train_step(model, opt, microbatches=2, hier_sync=True,
                                tiers=tiers)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             jitted = jax.jit(step, in_shardings=(sshard, bshard,
                                                  NamedSharding(mesh, P())),
                              out_shardings=(sshard, None))

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._compat import given, settings, st
 
 from repro.core.cost_model import Schedule
 from repro.core.hybrid_step import (hybrid_step_from_schedule,

@@ -1,7 +1,7 @@
 """Unit + property tests for the two-phase simplex solver."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._compat import given, settings, st
 
 from repro.core.lp import linprog
 

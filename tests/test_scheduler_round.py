@@ -1,0 +1,85 @@
+"""Property tests for the §V largest-fraction rounding rule (scalar and
+batched): conservation, non-negativity, disallowed entries pinned to zero,
+and the floor-overshoot (deficit < 0) repair path."""
+import numpy as np
+
+from tests._compat import given, settings, st
+
+from repro.core.scheduler import _round_batch_split, _round_batch_split_batch
+
+
+def _check_invariants(out, B, allowed):
+    assert out.sum() == B, (out, B)
+    assert (out >= 0).all(), out
+    assert (out[~np.asarray(allowed)] == 0).all(), (out, allowed)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 100_000))
+def test_round_invariants_random(seed):
+    rng = np.random.default_rng(seed)
+    B = int(rng.integers(1, 65))
+    allowed = np.array([True, rng.random() < 0.7, rng.random() < 0.7])
+    # LP-ish real split: non-negative, sums ~B (with jitter to exercise
+    # both deficit directions), sometimes mass on disallowed entries.
+    b = rng.dirichlet([1.0, 1.0, 1.0]) * B
+    b += rng.normal(0, 0.3, 3)
+    out = _round_batch_split(b, B, allowed)
+    _check_invariants(out, B, allowed)
+
+
+def test_round_plain_fractional_case():
+    out = _round_batch_split(np.array([3.4, 2.9, 1.7]), 8,
+                             np.array([True, True, True]))
+    assert out.sum() == 8
+    # largest fractions (0.9, 0.7) receive the two missing units
+    np.testing.assert_array_equal(out, [3, 3, 2])
+
+
+def test_round_disallowed_entries_stay_zero():
+    """Mass the LP left on a disallowed entry is reassigned, not floored
+    into the schedule (m == 0 forces b == 0 — constraints (14)/(15))."""
+    out = _round_batch_split(np.array([4.0, 3.0, 1.0]), 8,
+                             np.array([True, False, True]))
+    assert out[1] == 0
+    assert out.sum() == 8
+    assert (out >= 0).all()
+
+
+def test_round_deficit_negative_path_keeps_b_o_nonneg():
+    """Floor overshoot (sum of floors > B) must strip units without ever
+    driving an entry below zero.  The seed implementation pushed the whole
+    negative residue onto b_o, which could go negative."""
+    out = _round_batch_split(np.array([0.0, 5.0, 5.0]), 7,
+                             np.array([True, True, True]))
+    assert out.sum() == 7
+    assert (out >= 0).all()
+    out = _round_batch_split(np.array([1.0, 9.0, 9.0]), 4,
+                             np.array([True, True, True]))
+    assert out.sum() == 4
+    assert (out >= 0).all()
+
+
+def test_round_residual_dump_goes_to_b_o():
+    # only b_o allowed: everything must land there
+    out = _round_batch_split(np.array([0.2, 5.3, 2.5]), 8,
+                             np.array([True, False, False]))
+    np.testing.assert_array_equal(out, [8, 0, 0])
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 100_000))
+def test_batched_rounding_matches_scalar(seed):
+    rng = np.random.default_rng(seed)
+    K = 32
+    B = int(rng.integers(1, 65))
+    allowed = np.ones((K, 3), bool)
+    allowed[:, 1] = rng.random(K) < 0.7
+    allowed[:, 2] = rng.random(K) < 0.7
+    b = rng.dirichlet([1.0, 1.0, 1.0], K) * B
+    b += rng.normal(0, 0.4, (K, 3))
+    batch = _round_batch_split_batch(b, B, allowed)
+    for k in range(K):
+        scalar = _round_batch_split(b[k], B, allowed[k])
+        np.testing.assert_array_equal(batch[k], scalar, err_msg=str(k))
+        _check_invariants(batch[k], B, allowed[k])

@@ -1,6 +1,6 @@
 """Simulator-vs-cost-model validation (the paper's Fig. 6 claim)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from tests._compat import given, settings, st
 
 from repro.core import scheduler
 from repro.core.cost_model import Network, Schedule, t_total
