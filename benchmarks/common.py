@@ -1,14 +1,19 @@
 """Shared benchmark plumbing: the paper's testbed profiles + bandwidth
-sweeps (§VI-B), a tiny CSV/markdown table printer, and the JSON sink the
+sweeps (§VI-B), the heterogeneous device fleet used by the M-device
+benchmark, a tiny CSV/markdown table printer, and the JSON sink the
 perf-tracking mode (``benchmarks/run.py --json``) writes through."""
 from __future__ import annotations
 
 import json
 import platform
+import subprocess
 import time
 from typing import Dict, Iterable, List, Sequence
 
-from repro.core.cost_model import HierProfile, Network
+import numpy as np
+
+from repro.core.cost_model import HierProfile, MultiProfile, Network, \
+    StarNetwork
 from repro.core.profiler import (ALEXNET_TESTBED, PAPER_TESTBED,
                                  analytic_profile)
 from repro.models.cnn import alexnet, lenet5
@@ -37,6 +42,40 @@ def network(edge_cloud_mbps: float,
                    bw_ec=edge_cloud_mbps * MBPS)
 
 
+# Heterogeneous device fleet for the M-device sweep: per-device compute
+# slowdown vs the paper's reference device, and per-device uplink Mbps.
+# Deterministic so BENCH records stay comparable across PRs; the first
+# device is the paper's testbed device exactly (slowdown 1.0, 5 Mbps).
+FLEET_SLOWDOWNS = (1.0, 1.4, 1.9, 2.5, 1.2, 1.6, 2.2, 3.0)
+FLEET_UPLINK_MBPS = (5.0, 4.5, 4.0, 3.5, 5.0, 4.2, 3.8, 3.2)
+
+
+def fleet_profile(model_name: str, m: int) -> MultiProfile:
+    """M-device star profile for the paper-calibrated model testbed."""
+    assert 1 <= m <= len(FLEET_SLOWDOWNS)
+    return MultiProfile.from_hier(paper_profile(model_name),
+                                  FLEET_SLOWDOWNS[:m])
+
+
+def star_network(m: int, edge_cloud_mbps: float) -> StarNetwork:
+    assert 1 <= m <= len(FLEET_UPLINK_MBPS)
+    return StarNetwork(bw_de=np.array(FLEET_UPLINK_MBPS[:m]) * MBPS,
+                       bw_ec=edge_cloud_mbps * MBPS)
+
+
+def git_sha() -> str:
+    """Commit (short) of the checkout containing this repo — resolved from
+    this file's directory, not the process cwd; "unknown" outside git."""
+    import os
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, timeout=10, check=True,
+            cwd=os.path.dirname(os.path.abspath(__file__))).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
 def table(rows: Sequence[Dict], cols: Sequence[str],
           title: str = "") -> str:
     out: List[str] = []
@@ -55,6 +94,7 @@ def write_json(path: str, payload: Dict) -> str:
     """Write a benchmark payload with host/time provenance; returns path."""
     doc = {
         "generated_unix": time.time(),
+        "git_sha": git_sha(),
         "host": {"machine": platform.machine(),
                  "python": platform.python_version()},
         **payload,

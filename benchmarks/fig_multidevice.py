@@ -1,0 +1,97 @@
+"""M-device hybrid parallelism sweep (beyond the paper — DESIGN.md §6).
+
+The paper fixes the topology at one device + edge + cloud; this benchmark
+sweeps M ∈ {1, 2, 4, 8} heterogeneous straggler devices (compute slowdowns
+and uplink bandwidths from ``benchmarks.common.FLEET_*``) sharing one edge
+and one cloud.  Per M it records:
+
+* generalized Algorithm-1 scheduler runtime (stage-A sweep + per-device
+  cut refinement) and LP counts,
+* the predicted iteration time ``T_total`` and the DES-simulated makespan
+  (model validity must hold at M > 1 too — the Fig.-6 check generalized),
+* speedup over the All-Edge / All-Cloud baselines evaluated on the same
+  M-device cost model.
+
+``python -m benchmarks.fig_multidevice`` prints the table;
+``benchmarks/run.py --json`` folds :func:`run_json` into
+``BENCH_sched.json`` with each record stamped with M.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from benchmarks.common import (BATCH, fleet_profile, star_network, table)
+from repro.core.cost_model import (MultiProfile, MultiSchedule, StarNetwork,
+                                   t_total_multi)
+from repro.core.scheduler import solve_multi
+from repro.core.simulator import simulate_iteration_multi
+
+SWEEP_M = (1, 2, 4, 8)
+EDGE_CLOUD_MBPS = 3.0
+MODEL = "lenet5"
+
+
+def _all_on(profile: MultiProfile, net: StarNetwork, B: int,
+            worker: str) -> float:
+    """All-Edge / All-Cloud baseline on the M-device cost model: the whole
+    batch uploaded to one worker that trains the full model alone."""
+    other = "cloud" if worker == "edge" else "edge"
+    sched = MultiSchedule(
+        worker_o=worker, worker_l=other, s_workers=profile.device_names,
+        m_s=(0,) * profile.num_devices, m_l=0, b_o=B,
+        b_s=(0,) * profile.num_devices, b_l=0)
+    return t_total_multi(profile, net, sched).total
+
+
+def measure() -> List[Dict]:
+    rows: List[Dict] = []
+    B = BATCH[MODEL]
+    for m in SWEEP_M:
+        profile = fleet_profile(MODEL, m)
+        net = star_network(m, EDGE_CLOUD_MBPS)
+        t0 = time.perf_counter()
+        res = solve_multi(profile, net, B)
+        dt = time.perf_counter() - t0
+        sim = simulate_iteration_multi(profile, net, res.schedule)
+        t_edge = _all_on(profile, net, B, "edge")
+        t_cloud = _all_on(profile, net, B, "cloud")
+        rows.append({
+            "M": m,
+            "sched_s": dt,
+            "lps_solved": res.n_lp_solved,
+            "candidates": res.n_candidates,
+            "pruned": res.n_pruned,
+            "lps_refine": res.n_lp_refine,
+            "refine_rounds": res.refine_rounds,
+            "t_total": res.t_total,
+            "t_sim": sim,
+            "sim_rel_err": abs(sim - res.t_total) / res.t_total,
+            "speedup_all_edge": t_edge / res.t_total,
+            "speedup_all_cloud": t_cloud / res.t_total,
+            "schedule": res.schedule.describe(),
+        })
+    return rows
+
+
+def run() -> str:
+    rows = measure()
+    out = table(rows, ["M", "sched_s", "lps_solved", "pruned",
+                       "lps_refine", "refine_rounds", "t_total", "t_sim",
+                       "sim_rel_err",
+                       "speedup_all_edge", "speedup_all_cloud"],
+                f"M-device sweep — {MODEL}, B={BATCH[MODEL]}, "
+                f"edge-cloud {EDGE_CLOUD_MBPS} Mbps, heterogeneous fleet")
+    sched_lines = "\n".join(f"  M={r['M']}: {r['schedule']}" for r in rows)
+    return f"{out}\n\nchosen schedules:\n{sched_lines}"
+
+
+def run_json() -> List[Dict]:
+    """Rows for the ``multidevice`` section of ``BENCH_sched.json``; every
+    record carries its device count M (the sweep dimension)."""
+    return [{k: v for k, v in r.items() if k != "schedule"}
+            for r in measure()]
+
+
+if __name__ == "__main__":
+    print(run())

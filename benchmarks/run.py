@@ -3,9 +3,11 @@ roofline report if dry-run results exist.  ``python -m benchmarks.run``.
 
 ``--json [PATH]`` switches to perf-tracking mode: instead of printing every
 section it re-times the Table II scheduler search with both backends
-(reference scalar simplex vs batched engine) and writes the runtimes and
-speedups to ``BENCH_sched.json`` (or PATH), so the scheduler-engine perf
-trajectory is tracked across PRs.
+(reference scalar simplex vs batched engine) plus the M-device sweep
+(``benchmarks/fig_multidevice``) and writes the runtimes and speedups to
+``BENCH_sched.json`` (or PATH), so the scheduler-engine perf trajectory is
+tracked across PRs.  Every record is stamped with the git SHA and its
+device count M.
 """
 from __future__ import annotations
 
@@ -16,14 +18,15 @@ import time
 
 def run_sections() -> int:
     from benchmarks import (fig6_model_validity, fig7_8_speedup,
-                            fig9_10_sota, fig11_edge_cpu, roofline_report,
-                            table2_sched_runtime)
+                            fig9_10_sota, fig11_edge_cpu, fig_multidevice,
+                            roofline_report, table2_sched_runtime)
     sections = [
         ("Fig.6 model validity", fig6_model_validity.run),
         ("Fig.7/8 vs All-Edge/All-Cloud", fig7_8_speedup.run),
         ("Fig.9/10 vs JointDNN/JointDNN+/JALAD", fig9_10_sota.run),
         ("Fig.11 edge CPU scaling", fig11_edge_cpu.run),
         ("Table II scheduler runtime", table2_sched_runtime.run),
+        ("M-device sweep (beyond the paper)", fig_multidevice.run),
         ("Roofline report (from dry-run)", roofline_report.run),
     ]
     failures = 0
@@ -42,9 +45,10 @@ def run_sections() -> int:
 
 
 def run_sched_json(path: str) -> int:
-    from benchmarks import table2_sched_runtime
+    from benchmarks import fig_multidevice, table2_sched_runtime
     from benchmarks.common import write_json
     payload = table2_sched_runtime.run_json()
+    payload["multidevice"] = fig_multidevice.run_json()
     write_json(path, payload)
     rows = payload["rows"]
     print(f"wrote {path}")
@@ -56,6 +60,12 @@ def run_sched_json(path: str) -> int:
               f"{r['candidates']} LPs pruned)")
     print(f"  min speedup for N >= 16: "
           f"{payload['min_speedup_n_ge_16']:.1f}x")
+    for r in payload["multidevice"]:
+        print(f"  M={r['M']}: sched {r['sched_s']*1e3:.0f}ms "
+              f"T_total {r['t_total']:.3f}s sim {r['t_sim']:.3f}s "
+              f"(rel err {r['sim_rel_err']:.1%}) "
+              f"speedup vs all-edge {r['speedup_all_edge']:.2f}x "
+              f"/ all-cloud {r['speedup_all_cloud']:.2f}x")
     return 0
 
 

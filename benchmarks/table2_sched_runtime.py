@@ -41,7 +41,7 @@ def measure(include_reference: bool = True) -> List[Dict]:
         t0 = time.perf_counter()
         res_b = solve(profile, net, B=64)
         dt_b = time.perf_counter() - t0
-        row = {"network": name, "layers": n,
+        row = {"network": name, "layers": n, "M": 1,
                "batched_s": dt_b, "lps_solved": res_b.n_lp_solved,
                "candidates": res_b.n_candidates,
                "pruned": res_b.n_pruned,

@@ -1,23 +1,36 @@
-"""HierTrain per-iteration training-time cost model — Eqs. (1)-(12) of the paper.
+"""HierTrain per-iteration training-time cost model — Eqs. (1)-(12) of the
+paper, plus the M-device generalization (DESIGN.md §6).
 
 Conventions
 -----------
-* Physical workers are ``"device"``, ``"edge"``, ``"cloud"`` (indices 0/1/2).
-* Roles are ``o`` (TASK O, full model, owner), ``s`` (TASK S, layers 1..m_s),
-  ``l`` (TASK L, layers 1..m_l), with ``0 <= m_s <= m_l <= N``.
+* The paper's topology has exactly three physical workers — ``"device"``,
+  ``"edge"``, ``"cloud"`` (indices 0/1/2) — captured by
+  :class:`HierProfile` / :class:`Network` / :class:`Schedule` and scored by
+  :func:`t_total` / :func:`t_total_batch`.
+* The generalized topology has ``M`` heterogeneous devices in a star around
+  one edge server, which uplinks to one cloud — captured by
+  :class:`MultiProfile` / :class:`StarNetwork` / :class:`MultiSchedule` and
+  scored by :func:`t_total_multi` / :func:`t_total_multi_batch`.  With
+  ``M = 1`` the generalized model evaluates to the three-worker model
+  bit-for-bit (the M=1 equivalence suite asserts it).
+* Roles are ``o`` (TASK O, full model, owner), ``s`` (TASK S, layers
+  ``1..m_s`` — one such task per non-``o``/non-``l`` worker in the
+  generalized model, each with its own cut ``m_s[i]``), ``l`` (TASK L,
+  layers ``1..m_l``), with ``0 <= m_s[i] <= m_l <= N``.
 * Layers are 1-indexed in the paper; arrays here are 0-indexed, so layer ``i``
   lives at index ``i-1``.  ``MO[i-1]`` is the forward output size (bytes per
   sample) of layer ``i``; ``MP[i-1]`` its parameter bytes.
 * All times in seconds, sizes in bytes, bandwidths in bytes/second.
 
-The device↔cloud path is the series composition of the device↔edge and
-edge↔cloud links (data is relayed through the edge — Fig. 1(c) topology); the
-paper's Algorithm 1 only takes ``BW_de`` and ``BW_ec`` as inputs.
+Any path between workers without a direct physical link is the series
+composition of the links through the edge (data is relayed — Fig. 1(c)
+topology); the paper's Algorithm 1 only takes ``BW_de`` and ``BW_ec`` as
+inputs, the star network takes one uplink bandwidth per device.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -220,6 +233,386 @@ def t_total_batch(profile: HierProfile, net: Network,
     t_upd_s = np.where(bs > 0, U[s_idx, ms], 0.0)
     t_upd_l = np.where(bl > 0, U[l_idx, ml], 0.0)
     t_wg_s = np.where(bs > 0, 2.0 * MPc[ms] / bw_os, 0.0)
+    t_wg_l = np.where(bl > 0, 2.0 * MPc[ml] / bw_ol, 0.0)
+    t_update = np.maximum(np.maximum(t_upd_o, t_upd_s), t_upd_l) + \
+        np.maximum(t_wg_s, t_wg_l)
+
+    return t_f1 + t_b1 + t_f2 + t_b2 + t_f3 + t_b3 + t_update
+
+
+# ---------------------------------------------------------------------------
+# M-device generalization (DESIGN.md §6).
+#
+# Topology: M heterogeneous devices, each with its own uplink to one edge
+# server; the edge uplinks to one cloud.  Training data lives on the devices
+# (device-resident tasks read local samples for free; edge/cloud-resident
+# tasks ingest their sub-batch uploaded evenly, in parallel, from all M
+# devices).  One worker holds TASK O (full model), one holds TASK L (layers
+# 1..m_l); every remaining worker holds a TASK-S instance with its own cut
+# m_s[i] <= m_l.  With M = 1 this is exactly the paper's three-worker model
+# (same six role mappings, same Eq. 12 — bit-for-bit; the equivalence suite
+# asserts it).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MultiProfile:
+    """Profiling-stage output for the M-device star topology.
+
+    Same per-layer quantities as :class:`HierProfile`, but with one row per
+    worker in ``worker_names`` order: ``M`` device rows first, then
+    ``"edge"``, then ``"cloud"`` (so ``L_f`` is ``[M+2, N]``).
+    """
+    layer_names: Tuple[str, ...]
+    worker_names: Tuple[str, ...]
+    L_f: np.ndarray
+    L_b: np.ndarray
+    L_u: np.ndarray
+    MP: np.ndarray
+    MO: np.ndarray
+    sample_bytes: float
+
+    def __post_init__(self) -> None:
+        self.L_f = np.asarray(self.L_f, np.float64)
+        self.L_b = np.asarray(self.L_b, np.float64)
+        self.L_u = np.asarray(self.L_u, np.float64)
+        self.MP = np.asarray(self.MP, np.float64)
+        self.MO = np.asarray(self.MO, np.float64)
+        n, w = self.num_layers, self.num_workers
+        assert w >= 3 and self.worker_names[-2:] == ("edge", "cloud")
+        assert len(set(self.worker_names)) == w, "duplicate worker name"
+        assert self.L_f.shape == (w, n) and self.L_b.shape == (w, n)
+        assert self.L_u.shape == (w, n) and self.MP.shape == (n,)
+        assert self.MO.shape == (n,)
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layer_names)
+
+    @property
+    def num_workers(self) -> int:
+        return len(self.worker_names)
+
+    @property
+    def num_devices(self) -> int:
+        return self.num_workers - 2
+
+    @property
+    def device_names(self) -> Tuple[str, ...]:
+        return self.worker_names[:-2]
+
+    @property
+    def widx(self) -> Dict[str, int]:
+        return {w: i for i, w in enumerate(self.worker_names)}
+
+    def prefix(self) -> Dict[str, np.ndarray]:
+        if not hasattr(self, "_prefix"):
+            z = np.zeros((self.num_workers, 1))
+            zl = np.zeros(1)
+            self._prefix = {
+                "F": np.concatenate([z, np.cumsum(self.L_f, axis=1)], axis=1),
+                "Bk": np.concatenate([z, np.cumsum(self.L_b, axis=1)],
+                                     axis=1),
+                "U": np.concatenate([z, np.cumsum(self.L_u, axis=1)], axis=1),
+                "MP": np.concatenate([zl, np.cumsum(self.MP)]),
+            }
+        return self._prefix
+
+    @classmethod
+    def from_hier(cls, profile: HierProfile,
+                  device_scales: Sequence[float] = (1.0,)) -> "MultiProfile":
+        """Lift a 3-worker profile to M devices.
+
+        ``device_scales[i]`` is device *i*'s slowdown relative to the
+        profiled device row (1.0 = identical, 2.0 = half speed).  With a
+        single scale of 1.0 the result is the numerically identical M=1
+        profile (``x * 1.0`` is exact).
+        """
+        scales = np.asarray(tuple(device_scales), np.float64)
+        assert scales.ndim == 1 and scales.size >= 1 and (scales > 0).all()
+        m = scales.size
+        names = (("device",) if m == 1 else
+                 tuple(f"device_{i}" for i in range(m))) + ("edge", "cloud")
+
+        def lift(a: np.ndarray) -> np.ndarray:
+            return np.concatenate([a[0][None, :] * scales[:, None], a[1:]],
+                                  axis=0)
+
+        return cls(layer_names=profile.layer_names, worker_names=names,
+                   L_f=lift(profile.L_f), L_b=lift(profile.L_b),
+                   L_u=lift(profile.L_u), MP=profile.MP, MO=profile.MO,
+                   sample_bytes=profile.sample_bytes)
+
+    def three_worker(self) -> HierProfile:
+        """The exact 3-worker profile (requires ``M == 1``)."""
+        assert self.num_devices == 1, "only an M=1 profile reduces"
+        return HierProfile(layer_names=self.layer_names, L_f=self.L_f,
+                           L_b=self.L_b, L_u=self.L_u, MP=self.MP,
+                           MO=self.MO, sample_bytes=self.sample_bytes)
+
+
+@dataclasses.dataclass
+class StarNetwork:
+    """Star topology: per-device uplinks ``bw_de[i]`` (device_i↔edge) and one
+    backhaul ``bw_ec`` (edge↔cloud), all in bytes/s.  Paths without a direct
+    link (device↔cloud, device↔device) are the series composition of their
+    hops through the edge, matching :meth:`Network.bw`."""
+    bw_de: np.ndarray
+    bw_ec: float
+
+    def __post_init__(self) -> None:
+        self.bw_de = np.atleast_1d(np.asarray(self.bw_de, np.float64))
+        assert (self.bw_de > 0).all() and self.bw_ec > 0
+
+    @property
+    def num_devices(self) -> int:
+        return int(self.bw_de.size)
+
+    @classmethod
+    def from_network(cls, net: Network, num_devices: int = 1
+                     ) -> "StarNetwork":
+        return cls(bw_de=np.full(num_devices, net.bw_de), bw_ec=net.bw_ec)
+
+    def three_worker(self) -> Network:
+        assert self.num_devices == 1
+        return Network(bw_de=float(self.bw_de[0]), bw_ec=self.bw_ec)
+
+    def bw_matrix(self) -> np.ndarray:
+        """``[M+2, M+2]`` pairwise bandwidths in worker order (devices...,
+        edge, cloud); diagonal ``inf``.  ``[i, j]`` for two devices is the
+        relayed series path through the edge."""
+        m = self.num_devices
+        w = m + 2
+        bwm = np.full((w, w), np.inf)
+        de, ec = self.bw_de, self.bw_ec
+        bwm[:m, m] = bwm[m, :m] = de                     # device_i <-> edge
+        bwm[m, m + 1] = bwm[m + 1, m] = ec               # edge <-> cloud
+        dc = 1.0 / (1.0 / de + 1.0 / ec)                 # relayed, Fig. 1(c)
+        bwm[:m, m + 1] = bwm[m + 1, :m] = dc
+        dd = 1.0 / (1.0 / de[:, None] + 1.0 / de[None, :])
+        dd[np.diag_indices(m)] = np.inf
+        bwm[:m, :m] = dd
+        return bwm
+
+    def upload_bw(self) -> np.ndarray:
+        """``[M+2]`` effective ingest bandwidth for a worker receiving its
+        sub-batch uploaded *evenly in parallel* from all M devices: the
+        slowest uplink carries ``1/M`` of the bytes, so the edge ingests at
+        ``M * min(bw_de)`` and the cloud at the series composition of that
+        with the backhaul.  Devices read local samples (``inf``)."""
+        m = self.num_devices
+        up = np.full(m + 2, np.inf)
+        radio = m * self.bw_de.min()
+        up[m] = radio
+        up[m + 1] = 1.0 / (1.0 / radio + 1.0 / self.bw_ec)
+        return up
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiSchedule:
+    """An M-device HierTrain scheduling decision.
+
+    ``s_workers[i]`` runs a TASK-S instance over layers ``1..m_s[i]`` on its
+    ``b_s[i]`` samples; ``worker_o``/``worker_l`` are as in :class:`Schedule`.
+    ``len(s_workers) == M`` always (the non-o, non-l workers)."""
+    worker_o: str
+    worker_l: str
+    s_workers: Tuple[str, ...]
+    m_s: Tuple[int, ...]
+    m_l: int
+    b_o: int
+    b_s: Tuple[int, ...]
+    b_l: int
+
+    @property
+    def batch(self) -> int:
+        return self.b_o + sum(self.b_s) + self.b_l
+
+    def describe(self) -> str:
+        s = " ".join(f"s={w}(m={m},b={b})" for w, m, b in
+                     zip(self.s_workers, self.m_s, self.b_s))
+        return (f"o={self.worker_o}(b={self.b_o}) {s} "
+                f"l={self.worker_l}(m={self.m_l},b={self.b_l})")
+
+    @classmethod
+    def from_schedule(cls, sched: Schedule) -> "MultiSchedule":
+        return cls(worker_o=sched.worker_o, worker_l=sched.worker_l,
+                   s_workers=(sched.worker_s,), m_s=(sched.m_s,),
+                   m_l=sched.m_l, b_o=sched.b_o, b_s=(sched.b_s,),
+                   b_l=sched.b_l)
+
+    def to_schedule(self) -> Schedule:
+        assert len(self.s_workers) == 1, "only an M=1 schedule reduces"
+        return Schedule(worker_o=self.worker_o, worker_s=self.s_workers[0],
+                        worker_l=self.worker_l, m_s=self.m_s[0],
+                        m_l=self.m_l, b_o=self.b_o, b_s=self.b_s[0],
+                        b_l=self.b_l)
+
+
+def _validate_multi(profile: MultiProfile, sched: MultiSchedule) -> None:
+    N = profile.num_layers
+    M = profile.num_devices
+    assert len(sched.s_workers) == len(sched.m_s) == len(sched.b_s) == M
+    assert 0 <= sched.m_l <= N
+    for m_i, b_i in zip(sched.m_s, sched.b_s):
+        assert 0 <= m_i <= sched.m_l, "need 0 <= m_s[i] <= m_l <= N"
+        if m_i == 0:
+            assert b_i == 0, "m_s[i] = 0 forces b_s[i] = 0"
+    if sched.m_l == 0:
+        assert sched.b_l == 0, "m_l = 0 forces b_l = 0"
+    widx = profile.widx
+    seen = {sched.worker_o, sched.worker_l, *sched.s_workers}
+    assert len(seen) == M + 2 and all(w in widx for w in seen), \
+        "schedule must name every worker exactly once"
+
+
+def t_total_multi(profile: MultiProfile, net: StarNetwork,
+                  sched: MultiSchedule) -> Breakdown:
+    """Exact generalized Eq. (12) for an integer M-device schedule.
+
+    Phase structure (DESIGN.md §6): phase 1 runs every TASK-S front-end in
+    parallel up to its own cut; worker_o's catch-up of stream *i* from
+    ``m_s[i]`` to ``max_i m_s[i]`` is charged to phase 2 alongside the
+    common ``max_i m_s[i] .. m_l`` block.  With ``M = 1`` every term reduces
+    to the three-worker expression bit-for-bit.
+    """
+    _validate_multi(profile, sched)
+    N = profile.num_layers
+    M = profile.num_devices
+    p = profile.prefix()
+    F, Bk, U, MPc = p["F"], p["Bk"], p["U"], p["MP"]
+    widx = profile.widx
+    o, l = widx[sched.worker_o], widx[sched.worker_l]
+    s = [widx[w] for w in sched.s_workers]
+    ml = sched.m_l
+    bo, bl = sched.b_o, sched.b_l
+    bs = sched.b_s
+    msmax = max(sched.m_s)
+    bwm = net.bw_matrix()
+    up = net.upload_bw()
+    Q = profile.sample_bytes
+
+    def t_in(w: int, b: int) -> float:
+        if b == 0 or w < M:          # device-resident: local data
+            return 0.0
+        return b * Q / up[w]
+
+    t_in_o, t_in_l = t_in(o, bo), t_in(l, bl)
+    t_in_s = [t_in(si, bi) for si, bi in zip(s, bs)]
+    t_s_out = [bi * profile.MO[mi - 1] / bwm[o, si]
+               if (mi > 0 and bi > 0) else 0.0
+               for si, mi, bi in zip(s, sched.m_s, bs)]
+    t_l_out = bl * profile.MO[ml - 1] / bwm[o, l] \
+        if (ml > 0 and bl > 0) else 0.0
+
+    # --- phase 1: every front-end in parallel up to its own cut ----------
+    t_f1 = max(t_in_o + bo * F[o, msmax],
+               *[ti + bi * F[si, mi] + to for ti, si, mi, bi, to in
+                 zip(t_in_s, s, sched.m_s, bs, t_s_out)],
+               t_in_l + bl * F[l, msmax])
+    t_b1 = max(bo * Bk[o, msmax],
+               *[bi * Bk[si, mi] + to for si, mi, bi, to in
+                 zip(s, sched.m_s, bs, t_s_out)],
+               bl * Bk[l, msmax])
+
+    # --- phase 2: worker_o catches every stream up, then the common block -
+    bs_sum = sum(bs)
+    catch_f = sum(bi * (F[o, msmax] - F[o, mi])
+                  for mi, bi in zip(sched.m_s, bs))
+    catch_b = sum(bi * (Bk[o, msmax] - Bk[o, mi])
+                  for mi, bi in zip(sched.m_s, bs))
+    t_f2 = max((bo + bs_sum) * (F[o, ml] - F[o, msmax]) + catch_f,
+               bl * (F[l, ml] - F[l, msmax]) + t_l_out)
+    t_b2 = max((bo + bs_sum) * (Bk[o, ml] - Bk[o, msmax]) + catch_b,
+               bl * (Bk[l, ml] - Bk[l, msmax]) + t_l_out)
+
+    # --- phase 3 + weight update (as in the three-worker model) ----------
+    B = bo + bs_sum + bl
+    t_f3 = B * (F[o, N] - F[o, ml])
+    t_b3 = B * (Bk[o, N] - Bk[o, ml])
+    t_upd_o = U[o, N]
+    t_upd_s = [U[si, mi] if bi > 0 else 0.0
+               for si, mi, bi in zip(s, sched.m_s, bs)]
+    t_upd_l = U[l, ml] if bl > 0 else 0.0
+    t_wg_s = [2.0 * MPc[mi] / bwm[o, si] if bi > 0 else 0.0
+              for si, mi, bi in zip(s, sched.m_s, bs)]
+    t_wg_l = 2.0 * MPc[ml] / bwm[o, l] if bl > 0 else 0.0
+    t_update = max(t_upd_o, *t_upd_s, t_upd_l) + max(*t_wg_s, t_wg_l)
+
+    return Breakdown(
+        t_f1=t_f1, t_b1=t_b1, t_f2=t_f2, t_b2=t_b2, t_f3=t_f3, t_b3=t_b3,
+        t_update=t_update,
+        comm_input=t_in_o + sum(t_in_s) + t_in_l,
+        comm_activation=2.0 * (sum(t_s_out) + t_l_out),
+        comm_weightgrad=max(*t_wg_s, t_wg_l),
+    )
+
+
+def t_total_multi_batch(profile: MultiProfile, net: StarNetwork,
+                        o_idx: np.ndarray, s_idx: np.ndarray,
+                        l_idx: np.ndarray, ms: np.ndarray, ml: np.ndarray,
+                        b: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`t_total_multi` over K candidate schedules.
+
+    ``o_idx, l_idx, ml``: ``[K]``; ``s_idx, ms``: ``[K, M]``;
+    ``b``: ``[K, M+2]`` split ``(b_o, b_s[0..M-1], b_l)``.  Every arithmetic
+    expression mirrors the scalar evaluation term-for-term, and with
+    ``M = 1`` also mirrors :func:`t_total_batch` — a lane is bit-identical
+    to both.
+    """
+    N = profile.num_layers
+    M = profile.num_devices
+    p = profile.prefix()
+    F, Bk, U, MPc = p["F"], p["Bk"], p["U"], p["MP"]
+    bwm = net.bw_matrix()
+    up = net.upload_bw()
+    Q = profile.sample_bytes
+    bo = np.asarray(b[:, 0], np.float64)
+    bs = np.asarray(b[:, 1:1 + M], np.float64)
+    bl = np.asarray(b[:, 1 + M], np.float64)
+    o2 = o_idx[:, None]
+    msmax = ms.max(axis=1)
+
+    bw_os = bwm[o_idx[:, None], s_idx]        # [K, M]
+    bw_ol = bwm[o_idx, l_idx]
+
+    def t_in(w_idx: np.ndarray, bb: np.ndarray) -> np.ndarray:
+        return np.where((bb == 0) | (w_idx < M), 0.0, bb * Q / up[w_idx])
+
+    t_in_o, t_in_s, t_in_l = t_in(o_idx, bo), t_in(s_idx, bs), t_in(l_idx, bl)
+    mo_s = profile.MO[np.maximum(ms, 1) - 1]
+    mo_l = profile.MO[np.maximum(ml, 1) - 1]
+    t_s_out = np.where((ms > 0) & (bs > 0), bs * mo_s / bw_os, 0.0)
+    t_l_out = np.where((ml > 0) & (bl > 0), bl * mo_l / bw_ol, 0.0)
+
+    # --- phase 1 ---------------------------------------------------------
+    t_f1 = np.maximum(np.maximum(t_in_o + bo * F[o_idx, msmax],
+                                 (t_in_s + bs * F[s_idx, ms] +
+                                  t_s_out).max(axis=1)),
+                      t_in_l + bl * F[l_idx, msmax])
+    t_b1 = np.maximum(np.maximum(bo * Bk[o_idx, msmax],
+                                 (bs * Bk[s_idx, ms] + t_s_out).max(axis=1)),
+                      bl * Bk[l_idx, msmax])
+
+    # --- phase 2 (catch-up + common block) -------------------------------
+    bs_sum = bs.sum(axis=1)
+    catch_f = (bs * (F[o2, msmax[:, None]] - F[o2, ms])).sum(axis=1)
+    catch_b = (bs * (Bk[o2, msmax[:, None]] - Bk[o2, ms])).sum(axis=1)
+    t_f2 = np.maximum(
+        (bo + bs_sum) * (F[o_idx, ml] - F[o_idx, msmax]) + catch_f,
+        bl * (F[l_idx, ml] - F[l_idx, msmax]) + t_l_out)
+    t_b2 = np.maximum(
+        (bo + bs_sum) * (Bk[o_idx, ml] - Bk[o_idx, msmax]) + catch_b,
+        bl * (Bk[l_idx, ml] - Bk[l_idx, msmax]) + t_l_out)
+
+    # --- phase 3 + update ------------------------------------------------
+    B = bo + bs_sum + bl
+    t_f3 = B * (F[o_idx, N] - F[o_idx, ml])
+    t_b3 = B * (Bk[o_idx, N] - Bk[o_idx, ml])
+    t_upd_o = U[o_idx, N]
+    t_upd_s = np.where(bs > 0, U[s_idx, ms], 0.0).max(axis=1)
+    t_upd_l = np.where(bl > 0, U[l_idx, ml], 0.0)
+    t_wg_s = np.where(bs > 0, 2.0 * MPc[ms] / bw_os, 0.0).max(axis=1)
     t_wg_l = np.where(bl > 0, 2.0 * MPc[ml] / bw_ol, 0.0)
     t_update = np.maximum(np.maximum(t_upd_o, t_upd_s), t_upd_l) + \
         np.maximum(t_wg_s, t_wg_l)

@@ -1,13 +1,20 @@
 """Hybrid-parallelism execution engine (§IV-B) with exact SGD semantics.
 
-Executes one HierTrain iteration the way the paper describes it — three
-workers holding *separate copies* of their assigned layers, activations
-crossing at the cut points, and only frontend gradients being exchanged —
-and produces the *same* update as vanilla SGD over the full batch ``B``
-(sample-weighted gradient averaging; see DESIGN.md §3 for why weighting is
-required for exactness).
+Executes one HierTrain iteration the way the paper describes it — workers
+holding *separate copies* of their assigned layers, activations crossing at
+the cut points, and only frontend gradients being exchanged — and produces
+the *same* update as vanilla SGD over the full batch ``B`` (sample-weighted
+gradient averaging; see DESIGN.md §3 for why weighting is required for
+exactness).  Two entry points:
 
-The forward routing (Fig. 4):
+* :func:`hybrid_sgd_step` — the paper's three-worker topology (one TASK S,
+  one TASK L, one TASK O).
+* :func:`multi_hybrid_sgd_step` — M TASK-S streams with per-stream cuts
+  ``m_s[i]`` (DESIGN.md §6); worker_o picks each arriving stream up at its
+  own cut, in ascending-cut order.  With ``M = 1`` the traced program is
+  identical to :func:`hybrid_sgd_step`.
+
+The three-worker forward routing (Fig. 4):
 
 * ``worker_s``: layers ``1..m_s`` on its ``b_s`` samples -> ships ``h_s``.
 * ``worker_l``: layers ``1..m_l`` on its ``b_l`` samples -> ships ``h_l``.
@@ -27,7 +34,7 @@ from typing import Callable, Dict, List, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.cost_model import Schedule
+from repro.core.cost_model import MultiSchedule, Schedule
 from repro.models.cnn import LayeredModel
 
 Params = List[Dict[str, jax.Array]]
@@ -123,6 +130,110 @@ def hybrid_step_from_schedule(model: LayeredModel, params: Params,
 
 
 # ---------------------------------------------------------------------------
+# M-stream generalization (DESIGN.md §6): one TASK-S instance per non-o,
+# non-l worker, each with its own cut.  worker_o merges stream i into its
+# running activation batch at layer m_s[i] (ascending-cut order, stream
+# index breaking ties), then TASK L's stream at m_l, exactly mirroring the
+# generalized cost model's routing.
+# ---------------------------------------------------------------------------
+
+
+def multi_split_batch(x: jax.Array, y: jax.Array, sched: MultiSchedule
+                      ) -> Dict[str, object]:
+    """Assign the first ``b_o`` samples to o, the next ``b_s[i]`` to each
+    TASK-S stream in ``s_workers`` order, and the remainder to l."""
+    bo, bl = sched.b_o, sched.b_l
+    assert bo + sum(sched.b_s) + bl == x.shape[0]
+    out: Dict[str, object] = {"o": (x[:bo], y[:bo])}
+    streams = []
+    at = bo
+    for bi in sched.b_s:
+        streams.append((x[at:at + bi], y[at:at + bi]))
+        at += bi
+    out["s"] = tuple(streams)
+    out["l"] = (x[at:], y[at:])
+    return out
+
+
+def multi_hybrid_sgd_step(model: LayeredModel, params: Params,
+                          batches: Dict[str, object],
+                          m_s: Sequence[int], m_l: int, lr: float
+                          ) -> Tuple[Params, jax.Array]:
+    """One M-stream HierTrain iteration.  Returns (updated params, mean
+    loss).  Exact batch-``B`` SGD semantics: per-stream gradients are
+    per-sample sums, aggregated over every copy of each frontend layer and
+    scaled once by ``1/B``.  With ``M = 1`` and the same schedule this
+    traces the identical program to :func:`hybrid_sgd_step`.
+    """
+    N = model.num_layers
+    m_s = tuple(int(m) for m in m_s)
+    M = len(m_s)
+    x_o, y_o = batches["o"]
+    s_streams = batches["s"]
+    x_l, y_l = batches["l"]
+    assert len(s_streams) == M
+    assert all(0 <= m <= m_l for m in m_s) and m_l <= N
+    b_s = [sx.shape[0] for sx, _ in s_streams]
+    b_o, b_l = x_o.shape[0], x_l.shape[0]
+    B = b_o + sum(b_s) + b_l
+    # Streams join worker_o's batch in ascending-cut order (stream index
+    # breaks ties) — the labels must concatenate in the same order.
+    join_order = sorted((i for i in range(M) if b_s[i]),
+                        key=lambda i: (m_s[i], i))
+
+    p_o = params
+    p_s = [params[:m] for m in m_s]
+    p_l = params[:m_l]
+
+    def iteration_loss(p_o: Params, p_s: List[Params], p_l: Params
+                       ) -> jax.Array:
+        # --- forward: every front-end up to its own cut ---
+        h = [model.apply_segment(p_s[i], s_streams[i][0], 0, m_s[i])
+             if b_s[i] else None for i in range(M)]
+        h_l = model.apply_segment(p_l, x_l, 0, m_l) if b_l else None
+        # worker_o walks its segment list, merging arrivals at their cuts.
+        cur = x_o
+        prev = 0
+        for i in join_order:
+            if m_s[i] != prev:
+                cur = model.apply_segment(p_o, cur, prev, m_s[i])
+                prev = m_s[i]
+            cur = jnp.concatenate([cur, h[i]], axis=0)
+        cur = model.apply_segment(p_o, cur, prev, m_l)
+        if h_l is not None:
+            cur = jnp.concatenate([cur, h_l], axis=0)
+        logits = model.apply_segment(p_o, cur, m_l, N)
+        labels = jnp.concatenate(
+            [y_o] + [s_streams[i][1] for i in join_order] + [y_l], axis=0)
+        return _sum_nll(model, logits, labels)
+
+    total_loss, (g_o, g_s, g_l) = jax.value_and_grad(
+        iteration_loss, argnums=(0, 1, 2))(p_o, p_s, p_l)
+
+    # --- weight-update phase: layer-wise gradient exchange ---------------
+    new_params: Params = []
+    for i in range(N):
+        g = g_o[i]
+        for d in range(M):
+            if i < m_s[d] and b_s[d]:
+                g = jax.tree.map(jnp.add, g, g_s[d][i])
+        if i < m_l and b_l:
+            g = jax.tree.map(jnp.add, g, g_l[i])
+        new_params.append(jax.tree.map(
+            lambda p, gg: p - lr * (gg / B), params[i], g))
+    return new_params, total_loss / B
+
+
+def multi_hybrid_step_from_schedule(model: LayeredModel, params: Params,
+                                    x: jax.Array, y: jax.Array,
+                                    sched: MultiSchedule, lr: float
+                                    ) -> Tuple[Params, jax.Array]:
+    return multi_hybrid_sgd_step(model, params, multi_split_batch(x, y,
+                                                                  sched),
+                                 sched.m_s, sched.m_l, lr)
+
+
+# ---------------------------------------------------------------------------
 # Compiled fast path.  The cuts and learning rate are static (they select
 # the program structure), the params are donated (the step consumes the old
 # consensus weights and returns the new ones), and compiled steps are cached
@@ -148,6 +259,25 @@ def jitted_hybrid_step(model: LayeredModel, m_s: int, m_l: int,
         fn = jax.jit(step, donate_argnums=0)
         _JIT_CACHE[key] = fn
         _JIT_CACHE[key + ("model",)] = model  # keep id(model) valid
+    return fn
+
+
+def jitted_multi_hybrid_step(model: LayeredModel, m_s: Sequence[int],
+                             m_l: int, lr: float) -> Callable:
+    """Compiled ``(params, batches) -> (new_params, loss)`` M-stream hybrid
+    step; the cut tuple ``(m_s, m_l)`` and ``lr`` are static, ``params`` is
+    donated, and executables are cached per cut tuple like
+    :func:`jitted_hybrid_step`."""
+    cuts = tuple(int(m) for m in m_s)
+    key = ("multi", id(model), cuts, int(m_l), float(lr))
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        def step(params: Params, batches):
+            return multi_hybrid_sgd_step(model, params, batches, cuts,
+                                         m_l, lr)
+        fn = jax.jit(step, donate_argnums=0)
+        _JIT_CACHE[key] = fn
+        _JIT_CACHE[key + ("model",)] = model
     return fn
 
 

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cost_model import WORKERS, HierProfile
+from repro.core.cost_model import WORKERS, HierProfile, MultiProfile
 from repro.models.cnn import LayeredModel
 
 
@@ -89,6 +89,24 @@ def analytic_profile(model: LayeredModel,
         MO=np.array([m.out_bytes for m in metas], np.float64),
         sample_bytes=sample_bytes,
     )
+
+
+def multi_analytic_profile(model: LayeredModel,
+                           workers: Dict[str, WorkerSpec] | None = None,
+                           device_slowdowns: Sequence[float] = (1.0,),
+                           sample_bytes: float | None = None,
+                           bwd_fwd_ratio: float = 2.0) -> MultiProfile:
+    """Analytic profile for the M-device star (DESIGN.md §6).
+
+    ``device_slowdowns[i]`` scales the profiled device tier for device *i*
+    (1.0 = the testbed's reference device, 2.0 = half its speed) — the
+    straggler heterogeneity knob used by ``benchmarks/fig_multidevice``.
+    With the default single 1.0 entry this is exactly
+    :func:`analytic_profile` lifted to the M=1 star.
+    """
+    return MultiProfile.from_hier(
+        analytic_profile(model, workers, sample_bytes, bwd_fwd_ratio),
+        device_slowdowns)
 
 
 def measure_profile(model: LayeredModel,

@@ -20,6 +20,12 @@ Two backends (DESIGN.md §Scheduler-engine):
 * ``backend="reference"`` — the original sequential loop over scalar
   two-phase-simplex calls.  Kept as the correctness oracle; the equivalence
   suite asserts both backends return schedules with identical ``T_total``.
+
+:func:`solve_multi` generalizes the search to M heterogeneous devices
+around one edge and one cloud (DESIGN.md §6): an exhaustive stage over
+every (worker_o, worker_l) mapping and shared-cut pair — bit-identical to
+:func:`solve` at M = 1 — followed by batched coordinate descent on the
+per-device cuts for M >= 2.
 """
 from __future__ import annotations
 
@@ -32,8 +38,10 @@ import numpy as np
 from repro.core import batched_lp
 from repro.core import lp as lp_mod
 from repro.core.cost_model import (WIDX, WORKERS, Breakdown, HierProfile,
-                                   Network, Schedule, bw_matrix, t_total,
-                                   t_total_batch)
+                                   MultiProfile, MultiSchedule, Network,
+                                   Schedule, StarNetwork, bw_matrix, t_total,
+                                   t_total_batch, t_total_multi,
+                                   t_total_multi_batch)
 
 _LP_NUM_VARS = 7          # [b_o, b_s, b_l, t1, t2, t3, t4]
 _LP_NUM_UB = 12           # 10 epigraph arms + constraints (14)/(15)
@@ -368,3 +376,287 @@ def solve(profile: HierProfile, net: Network, B: int,
     if backend != "batched":
         raise ValueError(f"unknown scheduler backend: {backend!r}")
     return _solve_batched(profile, net, B, origin, workers, keep_log, prune)
+
+
+# ---------------------------------------------------------------------------
+# M-device scheduler (DESIGN.md §6).
+#
+# Stage A enumerates every (worker_o, worker_l) mapping x every *shared*
+# cut pair (all TASK-S instances at the same m_s) — with M = 1 that IS the
+# paper's Algorithm 1 search space in the reference enumeration order, so
+# the M=1 result is bit-identical to solve().  Stage B (M >= 2 only)
+# coordinate-descends the per-device cuts: every single-cut move is scored
+# by one more stacked LP pass, and only strict improvements are accepted.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class MultiSchedulerResult:
+    schedule: MultiSchedule
+    breakdown: Breakdown
+    t_total: float
+    n_lp_solved: int          # stage-A LPs: n_candidates - n_pruned
+    search_log: List[Tuple[MultiSchedule, float]]
+    n_candidates: int = 0
+    n_pruned: int = 0
+    refine_rounds: int = 0
+    n_lp_refine: int = 0      # stage-B LPs, counted separately
+
+
+def _multi_candidate_grid(N: int, worker_names: Tuple[str, ...]
+                          ) -> Tuple[np.ndarray, ...]:
+    """All (mapping, shared m_s, m_l) candidates.
+
+    Mapping order — ``worker_o`` outer, ``worker_l`` over the *reversed*
+    remaining workers — reproduces the 3-worker ``itertools.permutations``
+    (o, s, l) order at M = 1, so first-min tie-breaks match the reference
+    scheduler exactly.
+    """
+    W = len(worker_names)
+    M = W - 2
+    widx = {w: i for i, w in enumerate(worker_names)}
+    maps = []
+    for wo in worker_names:
+        rest = [w for w in worker_names if w != wo]
+        for wl in reversed(rest):
+            s_set = tuple(w for w in rest if w != wl)
+            maps.append((widx[wo], widx[wl],
+                         tuple(widx[w] for w in s_set)))
+    ms_g, ml_g = np.triu_indices(N + 1)       # row-major == m_s outer loop
+    P = ms_g.shape[0]
+    o_idx = np.repeat([m[0] for m in maps], P)
+    l_idx = np.repeat([m[1] for m in maps], P)
+    s_idx = np.repeat(np.array([m[2] for m in maps], np.int64), P, axis=0)
+    ms = np.tile(ms_g, len(maps))[:, None] * np.ones((1, M), np.int64)
+    ml = np.tile(ml_g, len(maps))
+    return o_idx, s_idx, l_idx, ms, ml
+
+
+def _build_multi_lp_stack(profile: MultiProfile, net: StarNetwork,
+                          o_idx: np.ndarray, s_idx: np.ndarray,
+                          l_idx: np.ndarray, ms: np.ndarray, ml: np.ndarray,
+                          B: int) -> Tuple[np.ndarray, np.ndarray,
+                                           np.ndarray, np.ndarray]:
+    """Constraint tensors of the per-cut LP for all K candidates.
+
+    Variables ``x = [b_o, b_s[0..M-1], b_l, t1, t2, t3, t4] >= 0``
+    (``M + 6`` of them); ``3M + 9`` inequality rows laid out exactly like
+    :func:`_build_lp_stack` at M = 1 (same rows, same order, same
+    coefficients), so the stacked simplex walks the same pivot path.
+    """
+    p = profile.prefix()
+    F, Bk = p["F"], p["Bk"]
+    M = profile.num_devices
+    K = o_idx.shape[0]
+    nv = M + 6
+    t1, t2, t3, t4 = M + 2, M + 3, M + 4, M + 5
+    Q = profile.sample_bytes
+    bwm = net.bw_matrix()
+    up = net.upload_bw()
+    msmax = ms.max(axis=1)
+    o2 = o_idx[:, None]
+
+    bw_os = bwm[o2, s_idx]                                  # [K, M]
+    bw_ol = bwm[o_idx, l_idx]
+    in_o = np.where(o_idx < M, 0.0, Q / up[o_idx])
+    in_s = np.where(s_idx < M, 0.0, Q / up[s_idx])
+    in_l = np.where(l_idx < M, 0.0, Q / up[l_idx])
+    mo_s = np.where(ms > 0, profile.MO[np.maximum(ms, 1) - 1] / bw_os, 0.0)
+    mo_l = np.where(ml > 0, profile.MO[np.maximum(ml, 1) - 1] / bw_ol, 0.0)
+
+    A_ub = np.zeros((K, 3 * M + 9, nv))
+    b_ub = np.zeros((K, 3 * M + 9))
+    # t1 >= each phase-1 forward arm; t2 >= each phase-1 backward arm.
+    A_ub[:, 0, 0] = in_o + F[o_idx, msmax]
+    for i in range(M):
+        A_ub[:, 1 + i, 1 + i] = in_s[:, i] + F[s_idx[:, i], ms[:, i]] + \
+            mo_s[:, i]
+    A_ub[:, M + 1, M + 1] = in_l + F[l_idx, msmax]
+    A_ub[:, M + 2, 0] = Bk[o_idx, msmax]
+    for i in range(M):
+        A_ub[:, M + 3 + i, 1 + i] = Bk[s_idx[:, i], ms[:, i]] + mo_s[:, i]
+    A_ub[:, 2 * M + 3, M + 1] = Bk[l_idx, msmax]
+    A_ub[:, :M + 2, t1] = -1.0
+    A_ub[:, M + 2:2 * M + 4, t2] = -1.0
+    # t3/t4 >= the phase-2 arms: worker_o pays the common msmax..m_l block
+    # for every stream plus the per-stream catch-up m_s[i]..msmax.
+    dF_o = F[o_idx, ml] - F[o_idx, msmax]
+    dBk_o = Bk[o_idx, ml] - Bk[o_idx, msmax]
+    A_ub[:, 2 * M + 4, 0] = dF_o
+    A_ub[:, 2 * M + 6, 0] = dBk_o
+    for i in range(M):
+        A_ub[:, 2 * M + 4, 1 + i] = dF_o + (F[o_idx, msmax] -
+                                            F[o_idx, ms[:, i]])
+        A_ub[:, 2 * M + 6, 1 + i] = dBk_o + (Bk[o_idx, msmax] -
+                                             Bk[o_idx, ms[:, i]])
+    A_ub[:, 2 * M + 5, M + 1] = (F[l_idx, ml] - F[l_idx, msmax]) + mo_l
+    A_ub[:, 2 * M + 7, M + 1] = (Bk[l_idx, ml] - Bk[l_idx, msmax]) + mo_l
+    A_ub[:, 2 * M + 4:2 * M + 6, t3] = -1.0
+    A_ub[:, 2 * M + 6:2 * M + 8, t4] = -1.0
+    # Constraints (14)/(15): b_s[i] <= m_s[i]*B, b_l <= m_l*B.
+    for i in range(M):
+        A_ub[:, 2 * M + 8 + i, 1 + i] = 1.0
+        b_ub[:, 2 * M + 8 + i] = ms[:, i].astype(np.float64) * B
+    A_ub[:, 3 * M + 8, M + 1] = 1.0
+    b_ub[:, 3 * M + 8] = ml.astype(np.float64) * B
+    # Constraint (17): b_o + sum b_s + b_l = B.
+    A_eq = np.zeros((K, 1, nv))
+    A_eq[:, 0, :M + 2] = 1.0
+    b_eq = np.full((K, 1), float(B))
+    return A_ub, b_ub, A_eq, b_eq
+
+
+def _solve_multi_lps(cost: np.ndarray, A_ub: np.ndarray, b_ub: np.ndarray,
+                     A_eq: np.ndarray, b_eq: np.ndarray,
+                     backend: str) -> Tuple[np.ndarray, np.ndarray]:
+    """Solve a stack of LPs: one stacked simplex call (batched) or a scalar
+    loop over the very same tensors (reference oracle)."""
+    if backend == "batched":
+        res = batched_lp.linprog_batch(cost, A_ub, b_ub, A_eq, b_eq)
+        return res.x, res.success
+    K, _, nv = A_ub.shape
+    x = np.zeros((K, nv))
+    ok = np.zeros(K, bool)
+    for k in range(K):
+        r = lp_mod.linprog(cost, A_ub[k], b_ub[k], A_eq[k], b_eq[k])
+        if r.success:
+            x[k], ok[k] = r.x, True
+    return x, ok
+
+
+def _multi_schedule_from_lane(profile: MultiProfile, o_idx, s_idx, l_idx,
+                              ms, ml, b_int, k: int) -> MultiSchedule:
+    names = profile.worker_names
+    M = profile.num_devices
+    return MultiSchedule(
+        worker_o=names[int(o_idx[k])], worker_l=names[int(l_idx[k])],
+        s_workers=tuple(names[int(j)] for j in s_idx[k]),
+        m_s=tuple(int(v) for v in ms[k]), m_l=int(ml[k]),
+        b_o=int(b_int[k, 0]),
+        b_s=tuple(int(v) for v in b_int[k, 1:1 + M]),
+        b_l=int(b_int[k, 1 + M]))
+
+
+def solve_multi(profile: MultiProfile, net: StarNetwork, B: int,
+                keep_log: bool = False, backend: str = "batched",
+                prune: bool = True,
+                refine_passes: int = 4) -> MultiSchedulerResult:
+    """Generalized Algorithm 1 over M devices + edge + cloud.
+
+    Stage A: exhaustive (mapping, shared-cut) sweep — with ``M == 1`` this
+    is exactly :func:`solve` (same candidates, same order, same LPs) and the
+    result is bit-identical.  Stage B (``M >= 2``): coordinate descent on
+    the per-device cuts ``m_s[i]``, one stacked LP per pass, accepting only
+    strict improvements, until a pass yields none or ``refine_passes`` is
+    exhausted.  ``backend="reference"`` solves every lane with the scalar
+    simplex instead of the stacked one (the correctness oracle).
+    """
+    if backend not in ("batched", "reference"):
+        raise ValueError(f"unknown scheduler backend: {backend!r}")
+    N = profile.num_layers
+    M = profile.num_devices
+    p = profile.prefix()
+    F, Bk, U = p["F"], p["Bk"], p["U"]
+    cost = np.concatenate([np.zeros(M + 2), np.ones(4)])
+    o_idx, s_idx, l_idx, ms, ml = _multi_candidate_grid(
+        N, profile.worker_names)
+    K = o_idx.shape[0]
+    msmax = ms.max(axis=1)
+
+    keep = np.ones(K, bool)
+    n_pruned = 0
+    if prune:
+        # Same dominance rule as the 3-worker engine: the T^3 + T_update
+        # cut-constants lower-bound T_total for any split.
+        Bf = float(B)
+        const_lb = Bf * (F[o_idx, N] - F[o_idx, ml]) + \
+            Bf * (Bk[o_idx, N] - Bk[o_idx, ml]) + U[o_idx, N]
+        trivial = (msmax == 0) & (ml == 0)
+        b_triv = np.zeros((int(trivial.sum()), M + 2), np.int64)
+        b_triv[:, 0] = B
+        incumbent = t_total_multi_batch(profile, net, o_idx[trivial],
+                                        s_idx[trivial], l_idx[trivial],
+                                        ms[trivial], ml[trivial],
+                                        b_triv).min()
+        keep = ~(const_lb > incumbent)
+        n_pruned = int(K - keep.sum())
+
+    ko, kl = o_idx[keep], l_idx[keep]
+    ks, kms, kml = s_idx[keep], ms[keep], ml[keep]
+    A_ub, b_ub, A_eq, b_eq = _build_multi_lp_stack(profile, net, ko, ks, kl,
+                                                   kms, kml, B)
+    x, ok = _solve_multi_lps(cost, A_ub, b_ub, A_eq, b_eq, backend)
+    n_lp = int(keep.sum())
+
+    allowed = np.concatenate([np.ones((kms.shape[0], 1), bool), kms > 0,
+                              (kml > 0)[:, None]], axis=1)
+    b_int = _round_batch_split_batch(x[:, :M + 2], B, allowed)
+    totals = t_total_multi_batch(profile, net, ko, ks, kl, kms, kml, b_int)
+    totals = np.where(ok, totals, np.inf)
+    assert ok.any(), "every per-cut LP failed — inconsistent profile?"
+    win = int(np.argmin(totals))  # first min == reference's sequential <
+
+    log: List[Tuple[MultiSchedule, float]] = []
+    if keep_log:
+        for k in np.nonzero(ok)[0]:
+            log.append((_multi_schedule_from_lane(profile, ko, ks, kl, kms,
+                                                  kml, b_int, k),
+                        float(totals[k])))
+
+    best_sched = _multi_schedule_from_lane(profile, ko, ks, kl, kms, kml,
+                                           b_int, win)
+    best_total = float(totals[win])
+
+    # ---- Stage B: per-device cut refinement (no-op at M == 1, where the
+    # stage-A sweep is already exhaustive). ------------------------------
+    rounds = 0
+    n_lp_refine = 0
+    if M >= 2 and refine_passes > 0:
+        cur_ms = np.array(best_sched.m_s, np.int64)
+        ml0 = int(best_sched.m_l)
+        ro = np.full(1, ko[win])
+        rs = ks[win][None, :]
+        rl = np.full(1, kl[win])
+        for _ in range(refine_passes):
+            cand = []
+            for i in range(M):
+                for c in range(ml0 + 1):
+                    if c != cur_ms[i]:
+                        row = cur_ms.copy()
+                        row[i] = c
+                        cand.append(row)
+            if not cand:
+                break
+            cms = np.stack(cand)
+            Kr = cms.shape[0]
+            ro_r, rl_r = np.repeat(ro, Kr), np.repeat(rl, Kr)
+            rs_r = np.repeat(rs, Kr, axis=0)
+            ml_r = np.full(Kr, ml0)
+            A_ub, b_ub, A_eq, b_eq = _build_multi_lp_stack(
+                profile, net, ro_r, rs_r, rl_r, cms, ml_r, B)
+            x, ok = _solve_multi_lps(cost, A_ub, b_ub, A_eq, b_eq, backend)
+            n_lp_refine += Kr
+            allowed = np.concatenate(
+                [np.ones((Kr, 1), bool), cms > 0,
+                 np.full((Kr, 1), ml0 > 0)], axis=1)
+            b_int = _round_batch_split_batch(x[:, :M + 2], B, allowed)
+            tot = t_total_multi_batch(profile, net, ro_r, rs_r, rl_r, cms,
+                                      ml_r, b_int)
+            tot = np.where(ok, tot, np.inf)
+            k = int(np.argmin(tot))
+            rounds += 1
+            if not (tot[k] < best_total):     # strict improvement only
+                break
+            best_total = float(tot[k])
+            best_sched = _multi_schedule_from_lane(
+                profile, ro_r, rs_r, rl_r, cms, ml_r, b_int, k)
+            cur_ms = np.array(best_sched.m_s, np.int64)
+            if keep_log:
+                log.append((best_sched, best_total))
+
+    bd = t_total_multi(profile, net, best_sched)
+    return MultiSchedulerResult(schedule=best_sched, breakdown=bd,
+                                t_total=bd.total, n_lp_solved=n_lp,
+                                search_log=log, n_candidates=K,
+                                n_pruned=n_pruned, refine_rounds=rounds,
+                                n_lp_refine=n_lp_refine)

@@ -1,15 +1,21 @@
-"""Discrete-event simulator of one HierTrain iteration on the 3-tier testbed.
+"""Discrete-event simulator of one HierTrain iteration.
 
-The analytic cost model (Eq. 12) assumes clean phase barriers.  This
-simulator executes the *procedure of §IV-B* — segment-level compute jobs and
-link transfers with FIFO resource contention — and measures the makespan.
-Benchmark ``fig6_model_validity`` compares the two (the paper's Fig. 6 shows
-"real and theoretical latencies highly match"); tests assert a tight bound.
+The analytic cost model (Eq. 12 and its M-device generalization) assumes
+clean phase barriers.  This simulator executes the *procedure of §IV-B* —
+segment-level compute jobs and link transfers with FIFO resource contention
+— and measures the makespan.  :func:`simulate_iteration` covers the paper's
+3-tier testbed; :func:`simulate_iteration_multi` covers the M-device star
+(per-device compute resources, per-device radio links, shared backhaul).
+Benchmarks ``fig6_model_validity`` and ``fig_multidevice`` compare
+simulated against analytic makespans (the paper's Fig. 6 shows "real and
+theoretical latencies highly match"); tests assert a tight bound.
 
 Resources:
 * one compute resource per physical worker (sequential execution),
-* one resource per *directed* physical link (full duplex).  device<->cloud
-  transfers are relayed through the edge: two sequential link jobs.
+* one resource per *directed* worker-pair pipe (full duplex).  Pairs
+  without a physical link (device<->cloud, device<->device) get their own
+  shaped pipe at the series bandwidth of the relayed route, matching the
+  paper's Linux-TC emulation (see ``_route``).
 """
 from __future__ import annotations
 
@@ -18,7 +24,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.cost_model import (WIDX, HierProfile, Network, Schedule)
+from repro.core.cost_model import (WIDX, HierProfile, MultiProfile,
+                                   MultiSchedule, Network, Schedule,
+                                   StarNetwork)
 
 
 @dataclasses.dataclass
@@ -153,5 +161,143 @@ def simulate_iteration(profile: HierProfile, net: Network, sched: Schedule,
     compute("u_o", wo, U[o, N], ["b_o1", "wg_s_up", "wg_l_up"])
     compute("u_s", ws, U[s, ms] if bs > 0 else 0.0, ["wg_s_down"])
     compute("u_l", wl, U[l, ml] if bl > 0 else 0.0, ["wg_l_down"])
+
+    return des.run()
+
+
+def simulate_iteration_multi(profile: MultiProfile, net: StarNetwork,
+                             sched: MultiSchedule) -> float:
+    """Makespan (seconds) of one M-device iteration under ``sched``.
+
+    Mirrors :func:`simulate_iteration` on the star topology: one compute
+    resource per worker, one shaped pipe per worker pair (each device's
+    radio is its own resource, so M uploads to the edge genuinely overlap),
+    and edge/cloud-resident tasks ingest their sub-batch as M parallel
+    transfers of ``b/M`` samples — one per device — matching the cost
+    model's even-upload assumption.  Following the paper's §VI-B Linux-TC
+    emulation one class further, the input-distribution flow gets its own
+    shaped pipe per (device, worker) pair instead of contending with that
+    device's activation flow: with a physically shared radio the DES
+    diverges from the generalized Eq. 12 by up to ~26% on upload-heavy
+    schedules (same family as the relayed-route divergence recorded in
+    EXPERIMENTS.md §Fig.6).
+    """
+    p = profile.prefix()
+    F, Bk, U, MPc = p["F"], p["Bk"], p["U"], p["MP"]
+    N = profile.num_layers
+    M = profile.num_devices
+    names = profile.worker_names
+    widx = profile.widx
+    o, l = widx[sched.worker_o], widx[sched.worker_l]
+    s = [widx[w] for w in sched.s_workers]
+    ml = sched.m_l
+    bo, bl = sched.b_o, sched.b_l
+    bs = list(sched.b_s)
+    msmax = max(sched.m_s)
+    bwm = net.bw_matrix()
+    Q = profile.sample_bytes
+
+    des = Des()
+
+    def xfer(name: str, a: int, b: int, nbytes: float,
+             deps: Sequence[str] = ()) -> str:
+        if a == b or nbytes <= 0.0:
+            des.add(name, (), (), deps)
+            return name
+        des.add(name, (f"link:{names[a]}->{names[b]}",),
+                (nbytes / bwm[a, b],), deps)
+        return name
+
+    def compute(name: str, w: int, seconds: float,
+                deps: Sequence[str] = ()) -> str:
+        des.add(name, (f"cpu:{names[w]}",), (max(seconds, 0.0),), deps)
+        return name
+
+    def ingest(prefix: str, w: int, b: int) -> List[str]:
+        """Input distribution for a task on worker ``w``: local (free) on a
+        device, else ``b/M`` samples uploaded from every device at once,
+        each on its own TC-shaped input-class radio pipe (see docstring).
+        Cloud-bound uploads are relayed: after its own radio hop every
+        chunk crosses ONE shared input-class backhaul pipe, so the M
+        parallel flows serialize there — matching ``upload_bw``'s series
+        composition instead of overbooking ``bw_ec`` M-fold."""
+        if w < M or b == 0:
+            des.add(prefix, (), (), ())
+            return [prefix]
+        out = []
+        chunk = b * Q / M
+        for j in range(M):
+            name = f"{prefix}_{j}"
+            if w == M + 1:               # device_j -> edge -> cloud relay
+                des.add(name, (f"link:in:{names[j]}->edge",
+                               "link:in:edge->cloud"),
+                        (chunk / net.bw_de[j], chunk / net.bw_ec), ())
+            else:
+                des.add(name, (f"link:in:{names[j]}->{names[w]}",),
+                        (chunk / bwm[j, w],), ())
+            out.append(name)
+        return out
+
+    # --- input distribution ---------------------------------------------
+    in_o = ingest("in_o", o, bo)
+    in_l = ingest("in_l", l, bl)
+
+    # --- forward ----------------------------------------------------------
+    acts: List[str] = []
+    for i, si in enumerate(s):
+        in_i = ingest(f"in_s{i}", si, bs[i])
+        compute(f"f_s{i}", si, bs[i] * F[si, sched.m_s[i]], in_i)
+        acts.append(xfer(
+            f"act_s{i}", si, o,
+            bs[i] * profile.MO[sched.m_s[i] - 1]
+            if sched.m_s[i] > 0 and bs[i] > 0 else 0.0, [f"f_s{i}"]))
+    compute("f_l", l, bl * F[l, ml], in_l)
+    xfer("act_l", l, o, bl * profile.MO[ml - 1] if ml > 0 and bl > 0
+         else 0.0, ["f_l"])
+    bs_sum = sum(bs)
+    catch_f = sum(bs[i] * (F[o, msmax] - F[o, sched.m_s[i]])
+                  for i in range(M))
+    catch_b = sum(bs[i] * (Bk[o, msmax] - Bk[o, sched.m_s[i]])
+                  for i in range(M))
+    compute("f_o1", o, bo * F[o, msmax], in_o)
+    compute("f_o2", o,
+            (bo + bs_sum) * (F[o, ml] - F[o, msmax]) + catch_f,
+            ["f_o1"] + acts)
+    compute("f_o3", o, (bo + bs_sum + bl) * (F[o, N] - F[o, ml]),
+            ["f_o2", "act_l"])
+
+    # --- backward ---------------------------------------------------------
+    compute("b_o3", o, (bo + bs_sum + bl) * (Bk[o, N] - Bk[o, ml]),
+            ["f_o3"])
+    xfer("gact_l", o, l, bl * profile.MO[ml - 1] if ml > 0 and bl > 0
+         else 0.0, ["b_o3"])
+    compute("b_l", l, bl * Bk[l, ml], ["gact_l"])
+    compute("b_o2", o,
+            (bo + bs_sum) * (Bk[o, ml] - Bk[o, msmax]) + catch_b, ["b_o3"])
+    for i, si in enumerate(s):
+        xfer(f"gact_s{i}", o, si,
+             bs[i] * profile.MO[sched.m_s[i] - 1]
+             if sched.m_s[i] > 0 and bs[i] > 0 else 0.0, ["b_o2"])
+        compute(f"b_s{i}", si, bs[i] * Bk[si, sched.m_s[i]],
+                [f"gact_s{i}"])
+    compute("b_o1", o, bo * Bk[o, msmax], ["b_o2"])
+
+    # --- weight update ----------------------------------------------------
+    wg_ups: List[str] = []
+    for i, si in enumerate(s):
+        wg_ups.append(xfer(f"wg_s{i}_up", si, o,
+                           MPc[sched.m_s[i]] if bs[i] > 0 else 0.0,
+                           [f"b_s{i}"]))
+        xfer(f"wg_s{i}_down", o, si,
+             MPc[sched.m_s[i]] if bs[i] > 0 else 0.0,
+             [f"wg_s{i}_up", "b_o1"])
+        compute(f"u_s{i}", si,
+                U[si, sched.m_s[i]] if bs[i] > 0 else 0.0,
+                [f"wg_s{i}_down"])
+    xfer("wg_l_up", l, o, MPc[ml] if bl > 0 else 0.0, ["b_l"])
+    xfer("wg_l_down", o, l, MPc[ml] if bl > 0 else 0.0,
+         ["wg_l_up", "b_o1"])
+    compute("u_o", o, U[o, N], ["b_o1", "wg_l_up"] + wg_ups)
+    compute("u_l", l, U[l, ml] if bl > 0 else 0.0, ["wg_l_down"])
 
     return des.run()

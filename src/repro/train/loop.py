@@ -147,6 +147,8 @@ def run_hier_loop(cfg: HierLoopConfig, model, profile, net, data,
             true_prof.L_f[i] *= factor
             true_prof.L_b[i] *= factor
             true_prof.L_u[i] *= factor
+        if hasattr(true_prof, "_prefix"):   # deepcopy carries the cache
+            del true_prof._prefix
         wall += t_total(true_prof, net, sched).total
         b = data.batch(step)
         # Cached compiled step: static (m_s, m_l, lr), donated params — a
@@ -162,5 +164,71 @@ def run_hier_loop(cfg: HierLoopConfig, model, profile, net, data,
         history.append({"step": step + 1, "loss": losses[-1],
                         "wall": wall, "m_s": sched.m_s, "m_l": sched.m_l,
                         "b": (sched.b_o, sched.b_s, sched.b_l)})
+    return {"params": params, "history": history, "wall": wall,
+            "final_schedule": sched}
+
+
+def run_multi_hier_loop(cfg: HierLoopConfig, model, profile, net, data,
+                        worker_slowdown: Optional[
+                            Callable[[int], Dict[str, float]]] = None,
+                        log: Optional[Callable[[str], None]] = None
+                        ) -> Dict[str, Any]:
+    """M-device variant of :func:`run_hier_loop` (DESIGN.md §6).
+
+    ``profile`` is a :class:`repro.core.cost_model.MultiProfile` and ``net``
+    a :class:`~repro.core.cost_model.StarNetwork`; ``worker_slowdown(step)``
+    maps *worker names* (``device_0``..., ``edge``, ``cloud``) to slowdown
+    factors — straggler devices feed the EMA profile and Algorithm 1
+    re-solves per-device cuts and sample splits online.
+    """
+    import copy
+
+    from repro.core.cost_model import t_total_multi
+    from repro.core.hybrid_step import (jitted_multi_hybrid_step,
+                                        multi_split_batch)
+    from repro.core.scheduler import solve_multi
+
+    widx = profile.widx
+    prof = copy.deepcopy(profile)
+    result = solve_multi(prof, net, cfg.batch)
+    sched = result.schedule
+    params = model.init(jax.random.PRNGKey(cfg.seed))
+    wall = 0.0
+    history = []
+    losses = []
+    for step in range(cfg.total_steps):
+        slow = worker_slowdown(step) if worker_slowdown else {}
+        if slow and (step % cfg.resched_every == 0) and step > 0:
+            for w, factor in slow.items():
+                i = widx[w]
+                for name in ("L_f", "L_b", "L_u"):
+                    cur = getattr(prof, name)
+                    target = getattr(profile, name)[i] * factor
+                    cur[i] = (1 - cfg.ema) * cur[i] + cfg.ema * target
+            if hasattr(prof, "_prefix"):
+                del prof._prefix
+            sched = solve_multi(prof, net, cfg.batch).schedule
+        true_prof = copy.deepcopy(profile)
+        for w, factor in (slow or {}).items():
+            i = widx[w]
+            true_prof.L_f[i] *= factor
+            true_prof.L_b[i] *= factor
+            true_prof.L_u[i] *= factor
+        if hasattr(true_prof, "_prefix"):   # deepcopy carries the cache
+            del true_prof._prefix
+        wall += t_total_multi(true_prof, net, sched).total
+        b = data.batch(step)
+        step_fn = jitted_multi_hybrid_step(model, sched.m_s, sched.m_l,
+                                           cfg.lr)
+        params, loss = step_fn(params, multi_split_batch(
+            jax.numpy.asarray(b["x"]), jax.numpy.asarray(b["labels"]),
+            sched))
+        losses.append(float(loss))
+        if log and (step + 1) % 10 == 0:
+            log(f"multi-hier step {step+1}: loss={losses[-1]:.4f} "
+                f"sched=({sched.describe()}) wall={wall:.2f}s")
+        history.append({"step": step + 1, "loss": losses[-1],
+                        "wall": wall, "m_s": sched.m_s, "m_l": sched.m_l,
+                        "b": (sched.b_o, *sched.b_s, sched.b_l)})
     return {"params": params, "history": history, "wall": wall,
             "final_schedule": sched}
