@@ -65,15 +65,27 @@ def star_network(m: int, edge_cloud_mbps: float) -> StarNetwork:
 
 def git_sha() -> str:
     """Commit (short) of the checkout containing this repo — resolved from
-    this file's directory, not the process cwd; "unknown" outside git."""
+    this file's directory, not the process cwd; "unknown" outside git.
+
+    A ``+dirty`` suffix marks a stamp taken with uncommitted changes: the
+    artifact describes the commit *being prepared*, not the named SHA
+    (the committed ``BENCH_sched.json`` always lags one commit otherwise;
+    see EXPERIMENTS.md §Perf-tracking artifacts)."""
     import os
+    cwd = os.path.dirname(os.path.abspath(__file__))
     try:
-        return subprocess.run(
+        sha = subprocess.run(
             ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
-            text=True, timeout=10, check=True,
-            cwd=os.path.dirname(os.path.abspath(__file__))).stdout.strip()
+            text=True, timeout=10, check=True, cwd=cwd).stdout.strip()
     except Exception:
         return "unknown"
+    try:
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"], capture_output=True,
+            text=True, timeout=10, check=True, cwd=cwd).stdout.strip()
+        return f"{sha}+dirty" if dirty else sha
+    except Exception:
+        return sha
 
 
 def table(rows: Sequence[Dict], cols: Sequence[str],
@@ -91,10 +103,16 @@ def table(rows: Sequence[Dict], cols: Sequence[str],
 
 
 def write_json(path: str, payload: Dict) -> str:
-    """Write a benchmark payload with host/time provenance; returns path."""
+    """Write a benchmark payload with host/time provenance; returns path.
+
+    ``generated_in_ci`` marks in-CI regeneration (the schedule drift check
+    recomputes the deterministic fields there without rewriting the
+    committed artifact)."""
+    import os
     doc = {
         "generated_unix": time.time(),
         "git_sha": git_sha(),
+        "generated_in_ci": bool(os.environ.get("CI")),
         "host": {"machine": platform.machine(),
                  "python": platform.python_version()},
         **payload,

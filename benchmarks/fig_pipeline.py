@@ -1,0 +1,152 @@
+"""Pipelined steady-state sweep (beyond the paper — DESIGN.md §7).
+
+The paper (and ``fig7_8_speedup``) scores one iteration in isolation;
+this benchmark measures what hybrid parallelism buys once consecutive
+minibatches are *pipelined*.  Two sections:
+
+* **Table II profiles** (3-worker, synthetic N-layer networks) — for each
+  network, the latency-optimal vs throughput-optimal schedule
+  (``scheduler.solve`` with ``objective="latency" | "throughput"``), their
+  steady-state periods ``t_period``, the DES-measured period (model
+  validity), and the depth-K wall-clock ``T(K)`` speedup of pipelined
+  execution over K barrier iterations.
+* **M-device fleet** (the ``fig_multidevice`` fleet, M ∈ {1, 2, 4, 8}) —
+  the same comparison on ``solve_multi`` / ``t_period_multi``, where
+  throughput-optimal schedules genuinely diverge from latency-optimal
+  ones (the recurrence bound punishes round-trip-heavy cuts).
+
+``python -m benchmarks.fig_pipeline`` prints the tables;
+``benchmarks/run.py --json`` folds :func:`run_json` into
+``BENCH_sched.json`` (deterministic schedule/period fields are covered by
+the CI drift check).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from benchmarks.common import BATCH, fleet_profile, network, star_network, \
+    table
+from benchmarks.table2_sched_runtime import synthetic_profile
+from repro.core.cost_model import t_total, t_total_multi
+from repro.core.pipeline import (t_period, t_period_breakdown,
+                                 t_period_multi, t_pipeline)
+from repro.core.scheduler import solve, solve_multi
+from repro.core.simulator import simulate_pipeline
+
+NETS = {"lenet5": 5, "alexnet": 8, "vgg16": 16}
+SWEEP_M = (1, 2, 4, 8)
+SWEEP_K = (1, 2, 4, 8, 16)
+EDGE_CLOUD_MBPS = 3.0
+MODEL = "lenet5"
+K_MEASURE = (32, 64)        # DES period = slope of T(K) between these
+
+
+def _des_period(profile, net, sched) -> float:
+    k0, k1 = K_MEASURE
+    return (simulate_pipeline(profile, net, sched, k1) -
+            simulate_pipeline(profile, net, sched, k0)) / (k1 - k0)
+
+
+def measure_table2() -> List[Dict]:
+    rows: List[Dict] = []
+    for name, n in NETS.items():
+        profile = synthetic_profile(n)
+        net = network(EDGE_CLOUD_MBPS)
+        t0 = time.perf_counter()
+        lat = solve(profile, net, B=64)
+        thr = solve(profile, net, B=64, objective="throughput")
+        dt = time.perf_counter() - t0
+        des = _des_period(profile, net, thr.schedule)
+        k = SWEEP_K[-1]
+        barrier_k = k * lat.t_total
+        pipe_k = t_pipeline(profile, net, thr.schedule, k)
+        rows.append({
+            "network": name, "layers": n, "M": 1, "sched_s": dt,
+            "pipeline_depth": k,
+            "t_total_lat": lat.t_total,
+            "t_period_lat": lat.t_period,
+            "t_period_thr": thr.t_period,
+            "t_period_des": des,
+            "period_rel_err": abs(des - thr.t_period) / thr.t_period,
+            "bottleneck": t_period_breakdown(profile, net,
+                                             thr.schedule)["bottleneck"],
+            "speedup_pipelined": barrier_k / pipe_k,
+            "schedule_lat": lat.schedule.describe(),
+            "schedule_thr": thr.schedule.describe(),
+        })
+    return rows
+
+
+def measure_fleet() -> List[Dict]:
+    rows: List[Dict] = []
+    B = BATCH[MODEL]
+    for m in SWEEP_M:
+        profile = fleet_profile(MODEL, m)
+        net = star_network(m, EDGE_CLOUD_MBPS)
+        t0 = time.perf_counter()
+        lat = solve_multi(profile, net, B)
+        thr = solve_multi(profile, net, B, objective="throughput")
+        dt = time.perf_counter() - t0
+        des = _des_period(profile, net, thr.schedule)
+        k = SWEEP_K[-1]
+        barrier_k = k * lat.t_total
+        pipe_k = t_pipeline(profile, net, thr.schedule, k)
+        rows.append({
+            "M": m, "sched_s": dt,
+            "pipeline_depth": k,
+            "t_total_lat": lat.t_total,
+            "t_period_lat": lat.t_period,
+            "t_period_thr": thr.t_period,
+            "t_period_des": des,
+            "period_rel_err": abs(des - thr.t_period) / thr.t_period,
+            "period_gain": lat.t_period / thr.t_period,
+            "speedup_pipelined": barrier_k / pipe_k,
+            "schedule_lat": lat.schedule.describe(),
+            "schedule_thr": thr.schedule.describe(),
+            "_sched_thr": thr.schedule,     # object, stripped from JSON
+        })
+    return rows
+
+
+def run() -> str:
+    t2 = measure_table2()
+    fl = measure_fleet()
+    out = [table(t2, ["network", "layers", "t_total_lat", "t_period_lat",
+                      "t_period_thr", "t_period_des", "period_rel_err",
+                      "bottleneck", "speedup_pipelined"],
+                 f"Pipelined steady state — Table II profiles, B=64, "
+                 f"edge-cloud {EDGE_CLOUD_MBPS} Mbps, K={SWEEP_K[-1]}"),
+           "",
+           table(fl, ["M", "t_total_lat", "t_period_lat", "t_period_thr",
+                      "t_period_des", "period_rel_err", "period_gain",
+                      "speedup_pipelined"],
+                 f"Pipelined steady state — {MODEL} fleet, B={BATCH[MODEL]}, "
+                 f"M sweep, K={SWEEP_K[-1]}"),
+           "", "throughput-optimal schedules:"]
+    out += [f"  {r['network']}: {r['schedule_thr']}" for r in t2]
+    out += [f"  M={r['M']}: {r['schedule_thr']}" for r in fl]
+    # depth sweep on the largest fleet: model vs simulated wall clock
+    # (reuse the schedule measure_fleet already solved)
+    profile = fleet_profile(MODEL, SWEEP_M[-1])
+    net = star_network(SWEEP_M[-1], EDGE_CLOUD_MBPS)
+    sched = fl[-1]["_sched_thr"]
+    out.append(f"\nT(K) on the M={SWEEP_M[-1]} throughput schedule "
+               f"(model | DES):")
+    for kk in SWEEP_K:
+        out.append(f"  K={kk:>2}: {t_pipeline(profile, net, sched, kk):.3f}"
+                   f" | {simulate_pipeline(profile, net, sched, kk):.3f}")
+    return "\n".join(out)
+
+
+def run_json() -> Dict[str, List[Dict]]:
+    """Rows for the ``pipeline`` section of ``BENCH_sched.json``
+    (``_``-prefixed keys hold schedule objects and are stripped)."""
+    return {"table2": measure_table2(),
+            "fleet": [{k: v for k, v in r.items()
+                       if not k.startswith("_")}
+                      for r in measure_fleet()]}
+
+
+if __name__ == "__main__":
+    print(run())

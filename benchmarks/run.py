@@ -4,22 +4,52 @@ roofline report if dry-run results exist.  ``python -m benchmarks.run``.
 ``--json [PATH]`` switches to perf-tracking mode: instead of printing every
 section it re-times the Table II scheduler search with both backends
 (reference scalar simplex vs batched engine) plus the M-device sweep
-(``benchmarks/fig_multidevice``) and writes the runtimes and speedups to
-``BENCH_sched.json`` (or PATH), so the scheduler-engine perf trajectory is
-tracked across PRs.  Every record is stamped with the git SHA and its
-device count M.
+(``benchmarks/fig_multidevice``) and the pipelined steady-state sweep
+(``benchmarks/fig_pipeline``), and writes runtimes, speedups, periods and
+the chosen schedules to ``BENCH_sched.json`` (or PATH), so the
+scheduler-engine perf trajectory is tracked across PRs.  Every record is
+stamped with the git SHA (``+dirty`` when regenerated before the commit it
+describes) and its device count M.
+
+``--check-schedules [PATH]`` recomputes only the *deterministic* fields
+(schedules, exact costs, LP/prune counts — never timings) and fails when
+they drift from the committed artifact: CI runs this so a scheduler-
+behavior change can't land without regenerating ``BENCH_sched.json``.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+
+# Deterministic (timing-free) fields per BENCH_sched.json section: the
+# surface the drift check guards.
+_DET_KEYS = {
+    "rows": ("network", "layers", "M", "lps_solved", "candidates",
+             "pruned", "t_total", "schedule"),
+    "multidevice": ("M", "lps_solved", "candidates", "pruned",
+                    "lps_refine", "refine_rounds", "t_total", "t_sim",
+                    "sim_rel_err", "speedup_all_edge", "speedup_all_cloud",
+                    "schedule"),
+    "pipeline.table2": ("network", "layers", "M", "pipeline_depth",
+                        "t_total_lat", "t_period_lat", "t_period_thr",
+                        "t_period_des", "period_rel_err", "bottleneck",
+                        "speedup_pipelined", "schedule_lat",
+                        "schedule_thr"),
+    "pipeline.fleet": ("M", "pipeline_depth", "t_total_lat",
+                       "t_period_lat", "t_period_thr", "t_period_des",
+                       "period_rel_err", "period_gain",
+                       "speedup_pipelined", "schedule_lat",
+                       "schedule_thr"),
+}
 
 
 def run_sections() -> int:
     from benchmarks import (fig6_model_validity, fig7_8_speedup,
                             fig9_10_sota, fig11_edge_cpu, fig_multidevice,
-                            roofline_report, table2_sched_runtime)
+                            fig_pipeline, roofline_report,
+                            table2_sched_runtime)
     sections = [
         ("Fig.6 model validity", fig6_model_validity.run),
         ("Fig.7/8 vs All-Edge/All-Cloud", fig7_8_speedup.run),
@@ -27,6 +57,7 @@ def run_sections() -> int:
         ("Fig.11 edge CPU scaling", fig11_edge_cpu.run),
         ("Table II scheduler runtime", table2_sched_runtime.run),
         ("M-device sweep (beyond the paper)", fig_multidevice.run),
+        ("Pipelined steady state (T_period)", fig_pipeline.run),
         ("Roofline report (from dry-run)", roofline_report.run),
     ]
     failures = 0
@@ -44,11 +75,18 @@ def run_sections() -> int:
     return 1 if failures else 0
 
 
-def run_sched_json(path: str) -> int:
-    from benchmarks import fig_multidevice, table2_sched_runtime
-    from benchmarks.common import write_json
-    payload = table2_sched_runtime.run_json()
+def _build_payload(include_reference: bool = True) -> dict:
+    from benchmarks import fig_multidevice, fig_pipeline, \
+        table2_sched_runtime
+    payload = table2_sched_runtime.run_json(include_reference)
     payload["multidevice"] = fig_multidevice.run_json()
+    payload["pipeline"] = fig_pipeline.run_json()
+    return payload
+
+
+def run_sched_json(path: str) -> int:
+    from benchmarks.common import write_json
+    payload = _build_payload()
     write_json(path, payload)
     rows = payload["rows"]
     print(f"wrote {path}")
@@ -66,6 +104,73 @@ def run_sched_json(path: str) -> int:
               f"(rel err {r['sim_rel_err']:.1%}) "
               f"speedup vs all-edge {r['speedup_all_edge']:.2f}x "
               f"/ all-cloud {r['speedup_all_cloud']:.2f}x")
+    for r in payload["pipeline"]["fleet"]:
+        print(f"  pipeline M={r['M']}: T_period latency-opt "
+              f"{r['t_period_lat']:.3f}s -> throughput-opt "
+              f"{r['t_period_thr']:.3f}s ({r['period_gain']:.2f}x)")
+    return 0
+
+
+_MISSING = "<missing field>"
+
+
+def _det_view(section: str, rows: list) -> list:
+    # A key absent on either side surfaces as drift (never None == None).
+    keys = _DET_KEYS[section]
+    return [{k: r.get(k, _MISSING) for k in keys} for r in rows]
+
+
+def _close(a, b) -> bool:
+    if isinstance(a, float) and isinstance(b, (int, float)):
+        return abs(a - b) <= 1e-6 * max(abs(a), abs(b)) + 1e-12
+    return a == b
+
+
+def check_schedules(path: str) -> int:
+    """Recompute deterministic schedule fields; fail on drift from
+    ``path`` (the committed artifact)."""
+    with open(path) as f:
+        committed = json.load(f)
+    fresh = _build_payload(include_reference=False)
+    sections = {
+        "rows": (committed.get("rows", []), fresh["rows"]),
+        "multidevice": (committed.get("multidevice", []),
+                        fresh["multidevice"]),
+        "pipeline.table2": (committed.get("pipeline", {}).get("table2", []),
+                            fresh["pipeline"]["table2"]),
+        "pipeline.fleet": (committed.get("pipeline", {}).get("fleet", []),
+                           fresh["pipeline"]["fleet"]),
+    }
+    drift = 0
+    for name, (old, new) in sections.items():
+        old_v, new_v = _det_view(name, old), _det_view(name, new)
+        # A guarded key missing from the *recomputed* rows means _DET_KEYS
+        # went stale against the benchmark code — fail loudly instead of
+        # silently comparing nothing.
+        for i, n in enumerate(new_v):
+            for k, v in n.items():
+                if v is _MISSING:
+                    print(f"CONFIG {name}[{i}].{k}: not produced by the "
+                          f"benchmark — update _DET_KEYS in benchmarks/"
+                          f"run.py")
+                    drift += 1
+        if len(old_v) != len(new_v):
+            print(f"DRIFT {name}: {len(old_v)} committed rows vs "
+                  f"{len(new_v)} recomputed")
+            drift += 1
+            continue
+        for i, (o, n) in enumerate(zip(old_v, new_v)):
+            for k in _DET_KEYS[name]:
+                if not _close(o[k], n[k]):
+                    print(f"DRIFT {name}[{i}].{k}: committed {o[k]!r} "
+                          f"!= recomputed {n[k]!r}")
+                    drift += 1
+    if drift:
+        print(f"\n{drift} drifted field(s) — regenerate with "
+              f"`python -m benchmarks.run --json` and commit the result.")
+        return 1
+    print(f"schedules in {path} match the recomputed search "
+          f"(timings ignored).")
     return 0
 
 
@@ -76,7 +181,14 @@ def main() -> None:
                         help="write reference-vs-batched Table II scheduler "
                              "runtimes to PATH (default BENCH_sched.json) "
                              "instead of running every section")
+    parser.add_argument("--check-schedules", nargs="?",
+                        const="BENCH_sched.json", default=None,
+                        metavar="PATH",
+                        help="recompute the deterministic schedule fields "
+                             "and exit non-zero if they drift from PATH")
     args = parser.parse_args()
+    if args.check_schedules is not None:
+        sys.exit(check_schedules(args.check_schedules))
     if args.json is not None:
         sys.exit(run_sched_json(args.json))
     sys.exit(run_sections())

@@ -45,7 +45,8 @@ def measure(include_reference: bool = True) -> List[Dict]:
                "batched_s": dt_b, "lps_solved": res_b.n_lp_solved,
                "candidates": res_b.n_candidates,
                "pruned": res_b.n_pruned,
-               "t_total": res_b.t_total}
+               "t_total": res_b.t_total,
+               "schedule": res_b.schedule.describe()}
         if include_reference:
             t0 = time.perf_counter()
             res_r = solve(profile, net, B=64, backend="reference")
@@ -66,17 +67,23 @@ def run() -> str:
                  "simplex vs batched engine, this host)")
 
 
-def run_json() -> Dict:
-    """Payload for BENCH_sched.json (benchmarks/run.py --json)."""
-    rows = measure()
-    return {
+def run_json(include_reference: bool = True) -> Dict:
+    """Payload for BENCH_sched.json (benchmarks/run.py --json).
+
+    ``include_reference=False`` skips timing the scalar oracle (and the
+    speedup summary) — the deterministic-fields mode the CI schedule
+    drift check runs."""
+    rows = measure(include_reference=include_reference)
+    payload = {
         "benchmark": "table2_sched_runtime",
         "batch": 64,
         "edge_cloud_mbps": 3.0,
         "rows": rows,
-        "min_speedup_n_ge_16": min(r["speedup"] for r in rows
-                                   if r["layers"] >= 16),
     }
+    if include_reference:
+        payload["min_speedup_n_ge_16"] = min(
+            r["speedup"] for r in rows if r["layers"] >= 16)
+    return payload
 
 
 if __name__ == "__main__":

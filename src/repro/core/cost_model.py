@@ -26,6 +26,11 @@ Any path between workers without a direct physical link is the series
 composition of the links through the edge (data is relayed — Fig. 1(c)
 topology); the paper's Algorithm 1 only takes ``BW_de`` and ``BW_ec`` as
 inputs, the star network takes one uplink bandwidth per device.
+
+Everything here scores ONE iteration in isolation (barrier execution).
+The steady-state cost of *pipelined* consecutive minibatches —
+``t_period`` and friends — lives in :mod:`repro.core.pipeline`
+(DESIGN.md §7) and consumes the same profile/network/schedule types.
 """
 from __future__ import annotations
 

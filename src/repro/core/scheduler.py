@@ -26,6 +26,11 @@ around one edge and one cloud (DESIGN.md §6): an exhaustive stage over
 every (worker_o, worker_l) mapping and shared-cut pair — bit-identical to
 :func:`solve` at M = 1 — followed by batched coordinate descent on the
 per-device cuts for M >= 2.
+
+Both solvers take ``objective="latency"`` (default, Eq. 12 ``T_total``)
+or ``objective="throughput"``, which reuses the same LP stack and
+dominance prune but scores candidates with the pipelined steady-state
+period (:mod:`repro.core.pipeline`, DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -37,11 +42,14 @@ import numpy as np
 
 from repro.core import batched_lp
 from repro.core import lp as lp_mod
+from repro.core import pipeline as pipeline_mod
 from repro.core.cost_model import (WIDX, WORKERS, Breakdown, HierProfile,
                                    MultiProfile, MultiSchedule, Network,
                                    Schedule, StarNetwork, bw_matrix, t_total,
                                    t_total_batch, t_total_multi,
                                    t_total_multi_batch)
+
+OBJECTIVES = ("latency", "throughput")
 
 _LP_NUM_VARS = 7          # [b_o, b_s, b_l, t1, t2, t3, t4]
 _LP_NUM_UB = 12           # 10 epigraph arms + constraints (14)/(15)
@@ -57,6 +65,8 @@ class SchedulerResult:
     search_log: List[Tuple[Schedule, float]]
     n_candidates: int = 0
     n_pruned: int = 0
+    objective: str = "latency"
+    t_period: Optional[float] = None   # steady-state period of the winner
 
 
 def _round_batch_split(b_real: np.ndarray, B: int,
@@ -192,10 +202,17 @@ def _solve_cut_lp(profile: HierProfile, net: Network, wo: str, ws: str,
 
 def _solve_reference(profile: HierProfile, net: Network, B: int,
                      origin: str, workers: Tuple[str, ...],
-                     keep_log: bool) -> SchedulerResult:
-    """Algorithm 1, one scalar LP at a time (the correctness oracle)."""
+                     keep_log: bool,
+                     objective: str = "latency") -> SchedulerResult:
+    """Algorithm 1, one scalar LP at a time (the correctness oracle).
+
+    ``objective="throughput"`` keeps the same LP relaxation (splits are
+    still balanced for latency) but scores every rounded candidate with
+    the steady-state period instead of ``T_total`` (DESIGN.md §7).
+    """
     N = profile.num_layers
     best: Optional[Tuple[Schedule, Breakdown]] = None
+    best_score = np.inf
     n_lp = 0
     log: List[Tuple[Schedule, float]] = []
     for wo, ws, wl in itertools.permutations(workers, 3):
@@ -211,14 +228,19 @@ def _solve_reference(profile: HierProfile, net: Network, B: int,
                 sched = Schedule(wo, ws, wl, m_s, m_l,
                                  int(b_int[0]), int(b_int[1]), int(b_int[2]))
                 bd = t_total(profile, net, sched, origin)
+                score = bd.total if objective == "latency" else \
+                    pipeline_mod.t_period(profile, net, sched, origin)
                 if keep_log:
-                    log.append((sched, bd.total))
-                if best is None or bd.total < best[1].total:
+                    log.append((sched, score))
+                if best is None or score < best_score:
                     best = (sched, bd)
+                    best_score = score
     assert best is not None
-    return SchedulerResult(schedule=best[0], breakdown=best[1],
-                           t_total=best[1].total, n_lp_solved=n_lp,
-                           search_log=log, n_candidates=n_lp, n_pruned=0)
+    return SchedulerResult(
+        schedule=best[0], breakdown=best[1], t_total=best[1].total,
+        n_lp_solved=n_lp, search_log=log, n_candidates=n_lp, n_pruned=0,
+        objective=objective,
+        t_period=pipeline_mod.t_period(profile, net, best[0], origin))
 
 
 # ---------------------------------------------------------------------------
@@ -299,18 +321,29 @@ def _build_lp_stack(profile: HierProfile, net: Network, o_idx: np.ndarray,
 
 def _solve_batched(profile: HierProfile, net: Network, B: int, origin: str,
                    workers: Tuple[str, ...], keep_log: bool,
-                   prune: bool) -> SchedulerResult:
+                   prune: bool, objective: str = "latency"
+                   ) -> SchedulerResult:
     N = profile.num_layers
     p = profile.prefix()
     F, Bk, U = p["F"], p["Bk"], p["U"]
     o_idx, s_idx, l_idx, ms, ml = _candidate_grid(N, workers)
     K = o_idx.shape[0]
 
+    def score_batch(o, s, l, mss, mll, bb):
+        if objective == "latency":
+            return t_total_batch(profile, net, o, s, l, mss, mll, bb,
+                                 origin)
+        return pipeline_mod.t_period_batch(profile, net, o, s, l, mss, mll,
+                                           bb, origin)
+
     # Dominance pruning: the T^3 + T_update terms of Eq. (12) do not depend
     # on the batch split, so  B*(F_o[N]-F_o[ml]) + B*(Bk_o[N]-Bk_o[ml]) +
     # U_o[N]  lower-bounds any schedule with these cuts.  Candidates whose
     # bound already exceeds the best ``(m_s = m_l = 0)`` schedule (whose LP
     # is trivial: everything on worker_o) cannot win — skip their LPs.
+    # The same constants sit inside worker_o's CPU busy time, so the bound
+    # also lower-bounds the steady-state period and the prune stays valid
+    # under objective="throughput" (scored against the period incumbent).
     keep = np.ones(K, bool)
     n_pruned = 0
     if prune:
@@ -320,10 +353,9 @@ def _solve_batched(profile: HierProfile, net: Network, B: int, origin: str,
         trivial = (ms == 0) & (ml == 0)
         b_triv = np.zeros((int(trivial.sum()), 3), np.int64)
         b_triv[:, 0] = B
-        incumbent = t_total_batch(profile, net, o_idx[trivial],
-                                  s_idx[trivial], l_idx[trivial],
-                                  ms[trivial], ml[trivial], b_triv,
-                                  origin).min()
+        incumbent = score_batch(o_idx[trivial], s_idx[trivial],
+                                l_idx[trivial], ms[trivial], ml[trivial],
+                                b_triv).min()
         keep = ~(const_lb > incumbent)
         n_pruned = int(K - keep.sum())
 
@@ -336,7 +368,7 @@ def _solve_batched(profile: HierProfile, net: Network, B: int, origin: str,
     ok = res.success
     allowed = np.stack([np.ones_like(kms, bool), kms > 0, kml > 0], axis=1)
     b_int = _round_batch_split_batch(res.x[:, :3], B, allowed)
-    totals = t_total_batch(profile, net, ko, ks, kl, kms, kml, b_int, origin)
+    totals = score_batch(ko, ks, kl, kms, kml, b_int)
     totals = np.where(ok, totals, np.inf)
     assert ok.any(), "every per-cut LP failed — inconsistent profile?"
     win = int(np.argmin(totals))  # first min == reference's sequential <
@@ -356,7 +388,10 @@ def _solve_batched(profile: HierProfile, net: Network, B: int, origin: str,
                 int(b_int[k, 1]), int(b_int[k, 2])), float(totals[k])))
     return SchedulerResult(schedule=sched, breakdown=bd, t_total=bd.total,
                            n_lp_solved=int(keep.sum()), search_log=log,
-                           n_candidates=K, n_pruned=n_pruned)
+                           n_candidates=K, n_pruned=n_pruned,
+                           objective=objective,
+                           t_period=pipeline_mod.t_period(profile, net,
+                                                          sched, origin))
 
 
 def solve(profile: HierProfile, net: Network, B: int,
@@ -364,18 +399,27 @@ def solve(profile: HierProfile, net: Network, B: int,
           workers: Tuple[str, ...] = WORKERS,
           keep_log: bool = False,
           backend: str = "batched",
-          prune: bool = True) -> SchedulerResult:
+          prune: bool = True,
+          objective: str = "latency") -> SchedulerResult:
     """Algorithm 1: enumerate mappings x cuts, LP + round, return the best.
 
     ``backend="batched"`` (default) solves all candidate LPs as one stacked
     simplex; ``backend="reference"`` is the sequential scalar oracle.
     ``prune`` toggles the cut-constant dominance bound (batched only).
+    ``objective="latency"`` (default) minimizes the per-iteration ``T_total``
+    of Eq. 12; ``objective="throughput"`` reuses the same LP stack and
+    pruning but picks the candidate with the smallest steady-state
+    pipelined period ``t_period`` (DESIGN.md §7).
     """
+    if objective not in OBJECTIVES:
+        raise ValueError(f"unknown scheduler objective: {objective!r}")
     if backend == "reference":
-        return _solve_reference(profile, net, B, origin, workers, keep_log)
+        return _solve_reference(profile, net, B, origin, workers, keep_log,
+                                objective)
     if backend != "batched":
         raise ValueError(f"unknown scheduler backend: {backend!r}")
-    return _solve_batched(profile, net, B, origin, workers, keep_log, prune)
+    return _solve_batched(profile, net, B, origin, workers, keep_log, prune,
+                          objective)
 
 
 # ---------------------------------------------------------------------------
@@ -401,6 +445,8 @@ class MultiSchedulerResult:
     n_pruned: int = 0
     refine_rounds: int = 0
     n_lp_refine: int = 0      # stage-B LPs, counted separately
+    objective: str = "latency"
+    t_period: Optional[float] = None   # steady-state period of the winner
 
 
 def _multi_candidate_grid(N: int, worker_names: Tuple[str, ...]
@@ -540,7 +586,8 @@ def _multi_schedule_from_lane(profile: MultiProfile, o_idx, s_idx, l_idx,
 def solve_multi(profile: MultiProfile, net: StarNetwork, B: int,
                 keep_log: bool = False, backend: str = "batched",
                 prune: bool = True,
-                refine_passes: int = 4) -> MultiSchedulerResult:
+                refine_passes: int = 4,
+                objective: str = "latency") -> MultiSchedulerResult:
     """Generalized Algorithm 1 over M devices + edge + cloud.
 
     Stage A: exhaustive (mapping, shared-cut) sweep — with ``M == 1`` this
@@ -550,9 +597,13 @@ def solve_multi(profile: MultiProfile, net: StarNetwork, B: int,
     strict improvements, until a pass yields none or ``refine_passes`` is
     exhausted.  ``backend="reference"`` solves every lane with the scalar
     simplex instead of the stacked one (the correctness oracle).
+    ``objective="throughput"`` scores both stages with the steady-state
+    period ``t_period_multi`` instead of ``T_total`` (DESIGN.md §7).
     """
     if backend not in ("batched", "reference"):
         raise ValueError(f"unknown scheduler backend: {backend!r}")
+    if objective not in OBJECTIVES:
+        raise ValueError(f"unknown scheduler objective: {objective!r}")
     N = profile.num_layers
     M = profile.num_devices
     p = profile.prefix()
@@ -563,21 +614,28 @@ def solve_multi(profile: MultiProfile, net: StarNetwork, B: int,
     K = o_idx.shape[0]
     msmax = ms.max(axis=1)
 
+    def score_batch(o, s, l, mss, mll, bb):
+        if objective == "latency":
+            return t_total_multi_batch(profile, net, o, s, l, mss, mll, bb)
+        return pipeline_mod.t_period_multi_batch(profile, net, o, s, l,
+                                                 mss, mll, bb)
+
     keep = np.ones(K, bool)
     n_pruned = 0
     if prune:
         # Same dominance rule as the 3-worker engine: the T^3 + T_update
-        # cut-constants lower-bound T_total for any split.
+        # cut-constants lower-bound T_total for any split — and worker_o's
+        # CPU busy time, hence the period, so the prune is valid under
+        # either objective (scored against the matching incumbent).
         Bf = float(B)
         const_lb = Bf * (F[o_idx, N] - F[o_idx, ml]) + \
             Bf * (Bk[o_idx, N] - Bk[o_idx, ml]) + U[o_idx, N]
         trivial = (msmax == 0) & (ml == 0)
         b_triv = np.zeros((int(trivial.sum()), M + 2), np.int64)
         b_triv[:, 0] = B
-        incumbent = t_total_multi_batch(profile, net, o_idx[trivial],
-                                        s_idx[trivial], l_idx[trivial],
-                                        ms[trivial], ml[trivial],
-                                        b_triv).min()
+        incumbent = score_batch(o_idx[trivial], s_idx[trivial],
+                                l_idx[trivial], ms[trivial], ml[trivial],
+                                b_triv).min()
         keep = ~(const_lb > incumbent)
         n_pruned = int(K - keep.sum())
 
@@ -591,7 +649,7 @@ def solve_multi(profile: MultiProfile, net: StarNetwork, B: int,
     allowed = np.concatenate([np.ones((kms.shape[0], 1), bool), kms > 0,
                               (kml > 0)[:, None]], axis=1)
     b_int = _round_batch_split_batch(x[:, :M + 2], B, allowed)
-    totals = t_total_multi_batch(profile, net, ko, ks, kl, kms, kml, b_int)
+    totals = score_batch(ko, ks, kl, kms, kml, b_int)
     totals = np.where(ok, totals, np.inf)
     assert ok.any(), "every per-cut LP failed — inconsistent profile?"
     win = int(np.argmin(totals))  # first min == reference's sequential <
@@ -605,7 +663,7 @@ def solve_multi(profile: MultiProfile, net: StarNetwork, B: int,
 
     best_sched = _multi_schedule_from_lane(profile, ko, ks, kl, kms, kml,
                                            b_int, win)
-    best_total = float(totals[win])
+    best_score = float(totals[win])   # objective value (latency or period)
 
     # ---- Stage B: per-device cut refinement (no-op at M == 1, where the
     # stage-A sweep is already exhaustive). ------------------------------
@@ -640,23 +698,25 @@ def solve_multi(profile: MultiProfile, net: StarNetwork, B: int,
                 [np.ones((Kr, 1), bool), cms > 0,
                  np.full((Kr, 1), ml0 > 0)], axis=1)
             b_int = _round_batch_split_batch(x[:, :M + 2], B, allowed)
-            tot = t_total_multi_batch(profile, net, ro_r, rs_r, rl_r, cms,
-                                      ml_r, b_int)
+            tot = score_batch(ro_r, rs_r, rl_r, cms, ml_r, b_int)
             tot = np.where(ok, tot, np.inf)
             k = int(np.argmin(tot))
             rounds += 1
-            if not (tot[k] < best_total):     # strict improvement only
+            if not (tot[k] < best_score):     # strict improvement only
                 break
-            best_total = float(tot[k])
+            best_score = float(tot[k])
             best_sched = _multi_schedule_from_lane(
                 profile, ro_r, rs_r, rl_r, cms, ml_r, b_int, k)
             cur_ms = np.array(best_sched.m_s, np.int64)
             if keep_log:
-                log.append((best_sched, best_total))
+                log.append((best_sched, best_score))
 
     bd = t_total_multi(profile, net, best_sched)
     return MultiSchedulerResult(schedule=best_sched, breakdown=bd,
                                 t_total=bd.total, n_lp_solved=n_lp,
                                 search_log=log, n_candidates=K,
                                 n_pruned=n_pruned, refine_rounds=rounds,
-                                n_lp_refine=n_lp_refine)
+                                n_lp_refine=n_lp_refine,
+                                objective=objective,
+                                t_period=pipeline_mod.t_period_multi(
+                                    profile, net, best_sched))

@@ -1,14 +1,18 @@
-"""Discrete-event simulator of one HierTrain iteration.
+"""Discrete-event simulator of HierTrain iterations.
 
 The analytic cost model (Eq. 12 and its M-device generalization) assumes
 clean phase barriers.  This simulator executes the *procedure of §IV-B* —
 segment-level compute jobs and link transfers with FIFO resource contention
 — and measures the makespan.  :func:`simulate_iteration` covers the paper's
 3-tier testbed; :func:`simulate_iteration_multi` covers the M-device star
-(per-device compute resources, per-device radio links, shared backhaul).
-Benchmarks ``fig6_model_validity`` and ``fig_multidevice`` compare
-simulated against analytic makespans (the paper's Fig. 6 shows "real and
-theoretical latencies highly match"); tests assert a tight bound.
+(per-device compute resources, per-device radio links, shared backhaul);
+:func:`simulate_pipeline` runs K consecutive iterations as a pipeline with
+synchronous-SGD cross-iteration dependencies (DESIGN.md §7), validating
+the closed-form steady-state period of :mod:`repro.core.pipeline`.
+Benchmarks ``fig6_model_validity``, ``fig_multidevice`` and
+``fig_pipeline`` compare simulated against analytic makespans (the
+paper's Fig. 6 shows "real and theoretical latencies highly match");
+tests assert a tight bound.
 
 Resources:
 * one compute resource per physical worker (sequential execution),
@@ -20,7 +24,8 @@ Resources:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+import heapq
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -37,7 +42,6 @@ class _Task:
     deps: Tuple[str, ...] = ()
     start: float = 0.0
     end: float = 0.0
-    done: bool = False
 
 
 class Des:
@@ -56,18 +60,28 @@ class Des:
                                  tuple(deps))
 
     def run(self) -> float:
-        pending = dict(self.tasks)
-        while pending:
-            # Earliest-ready-first FIFO dispatch.
-            ready = [(max((self.tasks[d].end for d in t.deps), default=0.0),
-                      name)
-                     for name, t in pending.items()
-                     if all(self.tasks[d].done for d in t.deps)]
-            assert ready, "dependency cycle in task graph"
-            ready.sort()
-            _, name = ready[0]
-            t = pending.pop(name)
-            clock = max((self.tasks[d].end for d in t.deps), default=0.0)
+        # Dep-count + ready-heap dispatcher.  A task enters the heap the
+        # moment its last dependency has been dispatched, keyed by
+        # ``(max dep end, name)`` — the exact tuple the previous
+        # rescan-every-dispatch implementation sorted the ready set by, so
+        # the dispatch order (and therefore every FIFO resource queue) is
+        # preserved while the per-dispatch cost drops from O(n) to O(log n).
+        dependents: Dict[str, List[str]] = {n: [] for n in self.tasks}
+        counts: Dict[str, int] = {}
+        heap: List[Tuple[float, str]] = []
+        for name, t in self.tasks.items():
+            deps = set(t.deps)
+            counts[name] = len(deps)
+            for d in deps:
+                dependents[d].append(name)
+            if not deps:
+                heap.append((0.0, name))
+        heapq.heapify(heap)
+        makespan = 0.0
+        n_done = 0
+        while heap:
+            clock, name = heapq.heappop(heap)
+            t = self.tasks[name]
             t.start = clock
             for res, dur in zip(t.resources, t.durations):
                 free = self.res_free.get(res, 0.0)
@@ -75,8 +89,18 @@ class Des:
                 clock = begin + dur
                 self.res_free[res] = clock
             t.end = clock
-            t.done = True
-        return max(t.end for t in self.tasks.values())
+            n_done += 1
+            if clock > makespan:
+                makespan = clock
+            for succ in dependents[name]:
+                counts[succ] -= 1
+                if counts[succ] == 0:
+                    st = self.tasks[succ]
+                    ready = max((self.tasks[d].end for d in st.deps),
+                                default=0.0)
+                    heapq.heappush(heap, (ready, succ))
+        assert n_done == len(self.tasks), "dependency cycle in task graph"
+        return makespan
 
 
 def _route(net: Network, a: str, b: str) -> List[Tuple[str, float]]:
@@ -93,9 +117,19 @@ def _route(net: Network, a: str, b: str) -> List[Tuple[str, float]]:
     return [(f"link:{a}->{b}", net.bw(a, b))]
 
 
-def simulate_iteration(profile: HierProfile, net: Network, sched: Schedule,
-                       origin: str = "device") -> float:
-    """Makespan (seconds) of one training iteration under `sched`."""
+def _add_iteration(des: Des, profile: HierProfile, net: Network,
+                   sched: Schedule, origin: str, tag: str = "",
+                   prev: Optional[str] = None) -> None:
+    """Add one iteration's task DAG to ``des``.
+
+    ``tag`` prefixes every task name (the first iteration uses ``""`` so a
+    depth-1 pipeline is *literally* the single-iteration DAG — same names,
+    same dispatch order, bit-identical makespan).  ``prev`` is the previous
+    iteration's tag (``None`` for the first): it adds the cross-iteration
+    dependencies of §7 — each worker's forward task waits on its *own*
+    previous-iteration weight update (synchronous SGD semantics), while
+    links stay FIFO through the shared pipe resources.
+    """
     p = profile.prefix()
     F, Bk, U, MPc = p["F"], p["Bk"], p["U"], p["MP"]
     N = profile.num_layers
@@ -105,7 +139,11 @@ def simulate_iteration(profile: HierProfile, net: Network, sched: Schedule,
     bo, bs, bl = sched.b_o, sched.b_s, sched.b_l
     Q = profile.sample_bytes
 
-    des = Des()
+    def nm(base: str) -> str:
+        return tag + base
+
+    def lag(base: str) -> List[str]:
+        return [prev + base] if prev is not None else []
 
     def xfer(name: str, a: str, b: str, nbytes: float,
              deps: Sequence[str] = ()) -> str:
@@ -123,45 +161,54 @@ def simulate_iteration(profile: HierProfile, net: Network, sched: Schedule,
         return name
 
     # --- input distribution ---------------------------------------------
-    xfer("in_o", origin, wo, bo * Q if wo != origin else 0.0)
-    xfer("in_s", origin, ws, bs * Q if ws != origin else 0.0)
-    xfer("in_l", origin, wl, bl * Q if wl != origin else 0.0)
+    xfer(nm("in_o"), origin, wo, bo * Q if wo != origin else 0.0)
+    xfer(nm("in_s"), origin, ws, bs * Q if ws != origin else 0.0)
+    xfer(nm("in_l"), origin, wl, bl * Q if wl != origin else 0.0)
 
     # --- forward ----------------------------------------------------------
-    compute("f_s", ws, bs * F[s, ms], ["in_s"])
-    xfer("act_s", ws, wo, bs * profile.MO[ms - 1] if ms > 0 and bs > 0
-         else 0.0, ["f_s"])
-    compute("f_l", wl, bl * F[l, ml], ["in_l"])
-    xfer("act_l", wl, wo, bl * profile.MO[ml - 1] if ml > 0 and bl > 0
-         else 0.0, ["f_l"])
-    compute("f_o1", wo, bo * F[o, ms], ["in_o"])
-    compute("f_o2", wo, (bo + bs) * (F[o, ml] - F[o, ms]),
-            ["f_o1", "act_s"])
-    compute("f_o3", wo, (bo + bs + bl) * (F[o, N] - F[o, ml]),
-            ["f_o2", "act_l"])
+    compute(nm("f_s"), ws, bs * F[s, ms], [nm("in_s")] + lag("u_s"))
+    xfer(nm("act_s"), ws, wo, bs * profile.MO[ms - 1] if ms > 0 and bs > 0
+         else 0.0, [nm("f_s")])
+    compute(nm("f_l"), wl, bl * F[l, ml], [nm("in_l")] + lag("u_l"))
+    xfer(nm("act_l"), wl, wo, bl * profile.MO[ml - 1] if ml > 0 and bl > 0
+         else 0.0, [nm("f_l")])
+    compute(nm("f_o1"), wo, bo * F[o, ms], [nm("in_o")] + lag("u_o"))
+    compute(nm("f_o2"), wo, (bo + bs) * (F[o, ml] - F[o, ms]),
+            [nm("f_o1"), nm("act_s")])
+    compute(nm("f_o3"), wo, (bo + bs + bl) * (F[o, N] - F[o, ml]),
+            [nm("f_o2"), nm("act_l")])
 
     # --- backward ---------------------------------------------------------
-    compute("b_o3", wo, (bo + bs + bl) * (Bk[o, N] - Bk[o, ml]), ["f_o3"])
-    xfer("gact_l", wo, wl, bl * profile.MO[ml - 1] if ml > 0 and bl > 0
-         else 0.0, ["b_o3"])
-    compute("b_l", wl, bl * Bk[l, ml], ["gact_l"])
-    compute("b_o2", wo, (bo + bs) * (Bk[o, ml] - Bk[o, ms]), ["b_o3"])
-    xfer("gact_s", wo, ws, bs * profile.MO[ms - 1] if ms > 0 and bs > 0
-         else 0.0, ["b_o2"])
-    compute("b_s", ws, bs * Bk[s, ms], ["gact_s"])
-    compute("b_o1", wo, bo * Bk[o, ms], ["b_o2"])
+    compute(nm("b_o3"), wo, (bo + bs + bl) * (Bk[o, N] - Bk[o, ml]),
+            [nm("f_o3")])
+    xfer(nm("gact_l"), wo, wl, bl * profile.MO[ml - 1] if ml > 0 and bl > 0
+         else 0.0, [nm("b_o3")])
+    compute(nm("b_l"), wl, bl * Bk[l, ml], [nm("gact_l")])
+    compute(nm("b_o2"), wo, (bo + bs) * (Bk[o, ml] - Bk[o, ms]),
+            [nm("b_o3")])
+    xfer(nm("gact_s"), wo, ws, bs * profile.MO[ms - 1] if ms > 0 and bs > 0
+         else 0.0, [nm("b_o2")])
+    compute(nm("b_s"), ws, bs * Bk[s, ms], [nm("gact_s")])
+    compute(nm("b_o1"), wo, bo * Bk[o, ms], [nm("b_o2")])
 
     # --- weight update ----------------------------------------------------
-    xfer("wg_s_up", ws, wo, MPc[ms] if bs > 0 else 0.0, ["b_s"])
-    xfer("wg_l_up", wl, wo, MPc[ml] if bl > 0 else 0.0, ["b_l"])
-    xfer("wg_s_down", wo, ws, MPc[ms] if bs > 0 else 0.0,
-         ["wg_s_up", "b_o1"])
-    xfer("wg_l_down", wo, wl, MPc[ml] if bl > 0 else 0.0,
-         ["wg_l_up", "b_o1"])
-    compute("u_o", wo, U[o, N], ["b_o1", "wg_s_up", "wg_l_up"])
-    compute("u_s", ws, U[s, ms] if bs > 0 else 0.0, ["wg_s_down"])
-    compute("u_l", wl, U[l, ml] if bl > 0 else 0.0, ["wg_l_down"])
+    xfer(nm("wg_s_up"), ws, wo, MPc[ms] if bs > 0 else 0.0, [nm("b_s")])
+    xfer(nm("wg_l_up"), wl, wo, MPc[ml] if bl > 0 else 0.0, [nm("b_l")])
+    xfer(nm("wg_s_down"), wo, ws, MPc[ms] if bs > 0 else 0.0,
+         [nm("wg_s_up"), nm("b_o1")])
+    xfer(nm("wg_l_down"), wo, wl, MPc[ml] if bl > 0 else 0.0,
+         [nm("wg_l_up"), nm("b_o1")])
+    compute(nm("u_o"), wo, U[o, N], [nm("b_o1"), nm("wg_s_up"),
+                                     nm("wg_l_up")])
+    compute(nm("u_s"), ws, U[s, ms] if bs > 0 else 0.0, [nm("wg_s_down")])
+    compute(nm("u_l"), wl, U[l, ml] if bl > 0 else 0.0, [nm("wg_l_down")])
 
+
+def simulate_iteration(profile: HierProfile, net: Network, sched: Schedule,
+                       origin: str = "device") -> float:
+    """Makespan (seconds) of one training iteration under `sched`."""
+    des = Des()
+    _add_iteration(des, profile, net, sched, origin)
     return des.run()
 
 
@@ -182,6 +229,17 @@ def simulate_iteration_multi(profile: MultiProfile, net: StarNetwork,
     schedules (same family as the relayed-route divergence recorded in
     EXPERIMENTS.md §Fig.6).
     """
+    des = Des()
+    _add_iteration_multi(des, profile, net, sched)
+    return des.run()
+
+
+def _add_iteration_multi(des: Des, profile: MultiProfile, net: StarNetwork,
+                         sched: MultiSchedule, tag: str = "",
+                         prev: Optional[str] = None) -> None:
+    """M-device counterpart of :func:`_add_iteration` (same tag/prev
+    contract): one iteration's star-topology task DAG, with the §7
+    cross-iteration update->forward dependencies when ``prev`` is given."""
     p = profile.prefix()
     F, Bk, U, MPc = p["F"], p["Bk"], p["U"], p["MP"]
     N = profile.num_layers
@@ -197,7 +255,11 @@ def simulate_iteration_multi(profile: MultiProfile, net: StarNetwork,
     bwm = net.bw_matrix()
     Q = profile.sample_bytes
 
-    des = Des()
+    def nm(base: str) -> str:
+        return tag + base
+
+    def lag(base: str) -> List[str]:
+        return [prev + base] if prev is not None else []
 
     def xfer(name: str, a: int, b: int, nbytes: float,
              deps: Sequence[str] = ()) -> str:
@@ -213,7 +275,7 @@ def simulate_iteration_multi(profile: MultiProfile, net: StarNetwork,
         des.add(name, (f"cpu:{names[w]}",), (max(seconds, 0.0),), deps)
         return name
 
-    def ingest(prefix: str, w: int, b: int) -> List[str]:
+    def ingest(base: str, w: int, b: int) -> List[str]:
         """Input distribution for a task on worker ``w``: local (free) on a
         device, else ``b/M`` samples uploaded from every device at once,
         each on its own TC-shaped input-class radio pipe (see docstring).
@@ -222,12 +284,12 @@ def simulate_iteration_multi(profile: MultiProfile, net: StarNetwork,
         parallel flows serialize there — matching ``upload_bw``'s series
         composition instead of overbooking ``bw_ec`` M-fold."""
         if w < M or b == 0:
-            des.add(prefix, (), (), ())
-            return [prefix]
+            des.add(nm(base), (), (), ())
+            return [nm(base)]
         out = []
         chunk = b * Q / M
         for j in range(M):
-            name = f"{prefix}_{j}"
+            name = f"{nm(base)}_{j}"
             if w == M + 1:               # device_j -> edge -> cloud relay
                 des.add(name, (f"link:in:{names[j]}->edge",
                                "link:in:edge->cloud"),
@@ -246,58 +308,97 @@ def simulate_iteration_multi(profile: MultiProfile, net: StarNetwork,
     acts: List[str] = []
     for i, si in enumerate(s):
         in_i = ingest(f"in_s{i}", si, bs[i])
-        compute(f"f_s{i}", si, bs[i] * F[si, sched.m_s[i]], in_i)
+        compute(nm(f"f_s{i}"), si, bs[i] * F[si, sched.m_s[i]],
+                in_i + lag(f"u_s{i}"))
         acts.append(xfer(
-            f"act_s{i}", si, o,
+            nm(f"act_s{i}"), si, o,
             bs[i] * profile.MO[sched.m_s[i] - 1]
-            if sched.m_s[i] > 0 and bs[i] > 0 else 0.0, [f"f_s{i}"]))
-    compute("f_l", l, bl * F[l, ml], in_l)
-    xfer("act_l", l, o, bl * profile.MO[ml - 1] if ml > 0 and bl > 0
-         else 0.0, ["f_l"])
+            if sched.m_s[i] > 0 and bs[i] > 0 else 0.0, [nm(f"f_s{i}")]))
+    compute(nm("f_l"), l, bl * F[l, ml], in_l + lag("u_l"))
+    xfer(nm("act_l"), l, o, bl * profile.MO[ml - 1] if ml > 0 and bl > 0
+         else 0.0, [nm("f_l")])
     bs_sum = sum(bs)
     catch_f = sum(bs[i] * (F[o, msmax] - F[o, sched.m_s[i]])
                   for i in range(M))
     catch_b = sum(bs[i] * (Bk[o, msmax] - Bk[o, sched.m_s[i]])
                   for i in range(M))
-    compute("f_o1", o, bo * F[o, msmax], in_o)
-    compute("f_o2", o,
+    compute(nm("f_o1"), o, bo * F[o, msmax], in_o + lag("u_o"))
+    compute(nm("f_o2"), o,
             (bo + bs_sum) * (F[o, ml] - F[o, msmax]) + catch_f,
-            ["f_o1"] + acts)
-    compute("f_o3", o, (bo + bs_sum + bl) * (F[o, N] - F[o, ml]),
-            ["f_o2", "act_l"])
+            [nm("f_o1")] + acts)
+    compute(nm("f_o3"), o, (bo + bs_sum + bl) * (F[o, N] - F[o, ml]),
+            [nm("f_o2"), nm("act_l")])
 
     # --- backward ---------------------------------------------------------
-    compute("b_o3", o, (bo + bs_sum + bl) * (Bk[o, N] - Bk[o, ml]),
-            ["f_o3"])
-    xfer("gact_l", o, l, bl * profile.MO[ml - 1] if ml > 0 and bl > 0
-         else 0.0, ["b_o3"])
-    compute("b_l", l, bl * Bk[l, ml], ["gact_l"])
-    compute("b_o2", o,
-            (bo + bs_sum) * (Bk[o, ml] - Bk[o, msmax]) + catch_b, ["b_o3"])
+    compute(nm("b_o3"), o, (bo + bs_sum + bl) * (Bk[o, N] - Bk[o, ml]),
+            [nm("f_o3")])
+    xfer(nm("gact_l"), o, l, bl * profile.MO[ml - 1] if ml > 0 and bl > 0
+         else 0.0, [nm("b_o3")])
+    compute(nm("b_l"), l, bl * Bk[l, ml], [nm("gact_l")])
+    compute(nm("b_o2"), o,
+            (bo + bs_sum) * (Bk[o, ml] - Bk[o, msmax]) + catch_b,
+            [nm("b_o3")])
     for i, si in enumerate(s):
-        xfer(f"gact_s{i}", o, si,
+        xfer(nm(f"gact_s{i}"), o, si,
              bs[i] * profile.MO[sched.m_s[i] - 1]
-             if sched.m_s[i] > 0 and bs[i] > 0 else 0.0, ["b_o2"])
-        compute(f"b_s{i}", si, bs[i] * Bk[si, sched.m_s[i]],
-                [f"gact_s{i}"])
-    compute("b_o1", o, bo * Bk[o, msmax], ["b_o2"])
+             if sched.m_s[i] > 0 and bs[i] > 0 else 0.0, [nm("b_o2")])
+        compute(nm(f"b_s{i}"), si, bs[i] * Bk[si, sched.m_s[i]],
+                [nm(f"gact_s{i}")])
+    compute(nm("b_o1"), o, bo * Bk[o, msmax], [nm("b_o2")])
 
     # --- weight update ----------------------------------------------------
     wg_ups: List[str] = []
     for i, si in enumerate(s):
-        wg_ups.append(xfer(f"wg_s{i}_up", si, o,
+        wg_ups.append(xfer(nm(f"wg_s{i}_up"), si, o,
                            MPc[sched.m_s[i]] if bs[i] > 0 else 0.0,
-                           [f"b_s{i}"]))
-        xfer(f"wg_s{i}_down", o, si,
+                           [nm(f"b_s{i}")]))
+        xfer(nm(f"wg_s{i}_down"), o, si,
              MPc[sched.m_s[i]] if bs[i] > 0 else 0.0,
-             [f"wg_s{i}_up", "b_o1"])
-        compute(f"u_s{i}", si,
+             [nm(f"wg_s{i}_up"), nm("b_o1")])
+        compute(nm(f"u_s{i}"), si,
                 U[si, sched.m_s[i]] if bs[i] > 0 else 0.0,
-                [f"wg_s{i}_down"])
-    xfer("wg_l_up", l, o, MPc[ml] if bl > 0 else 0.0, ["b_l"])
-    xfer("wg_l_down", o, l, MPc[ml] if bl > 0 else 0.0,
-         ["wg_l_up", "b_o1"])
-    compute("u_o", o, U[o, N], ["b_o1", "wg_l_up"] + wg_ups)
-    compute("u_l", l, U[l, ml] if bl > 0 else 0.0, ["wg_l_down"])
+                [nm(f"wg_s{i}_down")])
+    xfer(nm("wg_l_up"), l, o, MPc[ml] if bl > 0 else 0.0, [nm("b_l")])
+    xfer(nm("wg_l_down"), o, l, MPc[ml] if bl > 0 else 0.0,
+         [nm("wg_l_up"), nm("b_o1")])
+    compute(nm("u_o"), o, U[o, N], [nm("b_o1"), nm("wg_l_up")] + wg_ups)
+    compute(nm("u_l"), l, U[l, ml] if bl > 0 else 0.0, [nm("wg_l_down")])
 
+
+def simulate_pipeline(profile: Union[HierProfile, MultiProfile],
+                      net: Union[Network, StarNetwork],
+                      sched: Union[Schedule, MultiSchedule], K: int,
+                      origin: str = "device") -> float:
+    """Makespan of ``K`` consecutive iterations executed as a pipeline.
+
+    Instantiates K copies of the single-iteration task DAG
+    (:func:`_add_iteration` / :func:`_add_iteration_multi`) with the
+    cross-iteration dependencies of DESIGN.md §7: each worker's iteration-k
+    forward waits on that worker's iteration-(k-1) weight update
+    (synchronous SGD), and every link/CPU stays a FIFO resource, so
+    consecutive minibatches overlap wherever the dependency structure
+    allows.  ``K = 1`` is bit-identical to :func:`simulate_iteration` /
+    :func:`simulate_iteration_multi` (same task names, same DAG, same
+    dispatch order).  The closed-form model (:mod:`repro.core.pipeline`)
+    predicts the asymptotic slope ``t_period``; the property suite asserts
+    the measured DES period converges to it.
+    """
+    assert K >= 1
+    multi = isinstance(sched, MultiSchedule)
+    des = Des()
+    prev: Optional[str] = None
+    for k in range(K):
+        # Equal-ready tie-breaks are by name, so all K prefetchable input
+        # transfers (ready at t = 0) enter each FIFO pipe in *name* order.
+        # Iteration tags are zero-padded *prefixes* built on "~" (which
+        # sorts after every identifier character), so dispatch ties order
+        # iteration-major: every bare first-iteration task first, then
+        # "~000001...", "~000002", ... — a pipe never serves iteration
+        # k+1's flow ahead of iteration k's.
+        tag = "" if k == 0 else f"~{k:06d}"
+        if multi:
+            _add_iteration_multi(des, profile, net, sched, tag, prev)
+        else:
+            _add_iteration(des, profile, net, sched, origin, tag, prev)
+        prev = tag
     return des.run()

@@ -100,6 +100,28 @@ class HierLoopConfig:
     resched_every: int = 20           # straggler mitigation cadence
     ema: float = 0.3
     seed: int = 0
+    pipeline_depth: int = 1           # K minibatches in flight (§7); 1 =
+    #                                   barrier-per-iteration execution
+    objective: str = "latency"        # scheduler objective (§7)
+
+
+def _ema_profile_update(prof, baseline, slow: Dict[str, float],
+                        worker_names, ema: float) -> None:
+    """EMA every worker toward its *currently observed* speed.
+
+    Workers absent from ``slow`` decay toward the baseline profile
+    (factor 1.0) — this is what lets a healed straggler recover: the old
+    code only touched workers the monitor still reported, so a worker
+    that stopped straggling kept its degraded profile forever.
+    """
+    for i, w in enumerate(worker_names):
+        factor = slow.get(w, 1.0)
+        for name in ("L_f", "L_b", "L_u"):
+            cur = getattr(prof, name)
+            target = getattr(baseline, name)[i] * factor
+            cur[i] = (1 - ema) * cur[i] + ema * target
+    if hasattr(prof, "_prefix"):
+        del prof._prefix
 
 
 def run_hier_loop(cfg: HierLoopConfig, model, profile, net, data,
@@ -113,33 +135,43 @@ def run_hier_loop(cfg: HierLoopConfig, model, profile, net, data,
     the straggler injection used by tests/benchmarks.  Execution is
     simulated with the calibrated cost model for timing and with the
     *real* hybrid JAX step for the numerics.
+
+    Re-scheduling is gated on cadence alone (every ``resched_every``
+    steps): each tick EMAs *every* worker toward its observed speed — so
+    a straggler that heals decays back to the baseline profile and the
+    loop returns to the pre-straggle schedule (the old gate skipped the
+    tick entirely once ``worker_slowdown`` reported nothing, freezing
+    the degraded schedule forever).
+
+    With ``cfg.pipeline_depth = K > 1`` the wall clock models pipelined
+    steady-state execution (DESIGN.md §7): the first step of each
+    K-window pays the Eq.-12 fill latency and the remaining ``K - 1``
+    pay one ``t_period`` each — and a re-schedule that actually changes
+    the schedule breaks the pipe, so the fill is re-paid at that step
+    regardless of window position.
     """
     import copy
 
-    from repro.core.cost_model import t_total
+    from repro.core.cost_model import WORKERS, t_total
     from repro.core.hybrid_step import jitted_hybrid_step, split_batch
+    from repro.core.pipeline import t_period
     from repro.core.scheduler import solve
 
     prof = copy.deepcopy(profile)
-    result = solve(prof, net, cfg.batch)
+    result = solve(prof, net, cfg.batch, objective=cfg.objective)
     sched = result.schedule
     params = model.init(jax.random.PRNGKey(cfg.seed))
     wall = 0.0
     history = []
     losses = []
     for step in range(cfg.total_steps):
+        prev_sched = sched
         slow = worker_slowdown(step) if worker_slowdown else {}
-        if slow and (step % cfg.resched_every == 0) and step > 0:
-            # online profile update (EMA toward observed slowdown)
-            for w, factor in slow.items():
-                i = {"device": 0, "edge": 1, "cloud": 2}[w]
-                for name in ("L_f", "L_b", "L_u"):
-                    cur = getattr(prof, name)
-                    target = getattr(profile, name)[i] * factor
-                    cur[i] = (1 - cfg.ema) * cur[i] + cfg.ema * target
-            if hasattr(prof, "_prefix"):
-                del prof._prefix
-            sched = solve(prof, net, cfg.batch).schedule
+        if worker_slowdown is not None and step > 0 and \
+                step % cfg.resched_every == 0:
+            _ema_profile_update(prof, profile, slow, WORKERS, cfg.ema)
+            sched = solve(prof, net, cfg.batch,
+                          objective=cfg.objective).schedule
         # timing from the cost model under the *actual* current speeds
         true_prof = copy.deepcopy(profile)
         for w, factor in (slow or {}).items():
@@ -149,7 +181,11 @@ def run_hier_loop(cfg: HierLoopConfig, model, profile, net, data,
             true_prof.L_u[i] *= factor
         if hasattr(true_prof, "_prefix"):   # deepcopy carries the cache
             del true_prof._prefix
-        wall += t_total(true_prof, net, sched).total
+        if cfg.pipeline_depth > 1 and step % cfg.pipeline_depth != 0 \
+                and sched == prev_sched:
+            wall += t_period(true_prof, net, sched)
+        else:   # window head or pipe broken by a re-schedule: pay fill
+            wall += t_total(true_prof, net, sched).total
         b = data.batch(step)
         # Cached compiled step: static (m_s, m_l, lr), donated params — a
         # reschedule that keeps the cuts reuses the same executable.
@@ -163,7 +199,8 @@ def run_hier_loop(cfg: HierLoopConfig, model, profile, net, data,
                 f"sched=({sched.describe()}) wall={wall:.2f}s")
         history.append({"step": step + 1, "loss": losses[-1],
                         "wall": wall, "m_s": sched.m_s, "m_l": sched.m_l,
-                        "b": (sched.b_o, sched.b_s, sched.b_l)})
+                        "b": (sched.b_o, sched.b_s, sched.b_l),
+                        "sched": sched})
     return {"params": params, "history": history, "wall": wall,
             "final_schedule": sched}
 
@@ -179,35 +216,36 @@ def run_multi_hier_loop(cfg: HierLoopConfig, model, profile, net, data,
     a :class:`~repro.core.cost_model.StarNetwork`; ``worker_slowdown(step)``
     maps *worker names* (``device_0``..., ``edge``, ``cloud``) to slowdown
     factors — straggler devices feed the EMA profile and Algorithm 1
-    re-solves per-device cuts and sample splits online.
+    re-solves per-device cuts and sample splits online.  Straggler
+    recovery, the cadence-only re-schedule gate, and the
+    ``pipeline_depth``/``objective`` wall-clock semantics match
+    :func:`run_hier_loop`.
     """
     import copy
 
     from repro.core.cost_model import t_total_multi
     from repro.core.hybrid_step import (jitted_multi_hybrid_step,
                                         multi_split_batch)
+    from repro.core.pipeline import t_period_multi
     from repro.core.scheduler import solve_multi
 
     widx = profile.widx
     prof = copy.deepcopy(profile)
-    result = solve_multi(prof, net, cfg.batch)
+    result = solve_multi(prof, net, cfg.batch, objective=cfg.objective)
     sched = result.schedule
     params = model.init(jax.random.PRNGKey(cfg.seed))
     wall = 0.0
     history = []
     losses = []
     for step in range(cfg.total_steps):
+        prev_sched = sched
         slow = worker_slowdown(step) if worker_slowdown else {}
-        if slow and (step % cfg.resched_every == 0) and step > 0:
-            for w, factor in slow.items():
-                i = widx[w]
-                for name in ("L_f", "L_b", "L_u"):
-                    cur = getattr(prof, name)
-                    target = getattr(profile, name)[i] * factor
-                    cur[i] = (1 - cfg.ema) * cur[i] + cfg.ema * target
-            if hasattr(prof, "_prefix"):
-                del prof._prefix
-            sched = solve_multi(prof, net, cfg.batch).schedule
+        if worker_slowdown is not None and step > 0 and \
+                step % cfg.resched_every == 0:
+            _ema_profile_update(prof, profile, slow, profile.worker_names,
+                                cfg.ema)
+            sched = solve_multi(prof, net, cfg.batch,
+                                objective=cfg.objective).schedule
         true_prof = copy.deepcopy(profile)
         for w, factor in (slow or {}).items():
             i = widx[w]
@@ -216,7 +254,11 @@ def run_multi_hier_loop(cfg: HierLoopConfig, model, profile, net, data,
             true_prof.L_u[i] *= factor
         if hasattr(true_prof, "_prefix"):   # deepcopy carries the cache
             del true_prof._prefix
-        wall += t_total_multi(true_prof, net, sched).total
+        if cfg.pipeline_depth > 1 and step % cfg.pipeline_depth != 0 \
+                and sched == prev_sched:
+            wall += t_period_multi(true_prof, net, sched)
+        else:   # window head or pipe broken by a re-schedule: pay fill
+            wall += t_total_multi(true_prof, net, sched).total
         b = data.batch(step)
         step_fn = jitted_multi_hybrid_step(model, sched.m_s, sched.m_l,
                                            cfg.lr)
@@ -229,6 +271,7 @@ def run_multi_hier_loop(cfg: HierLoopConfig, model, profile, net, data,
                 f"sched=({sched.describe()}) wall={wall:.2f}s")
         history.append({"step": step + 1, "loss": losses[-1],
                         "wall": wall, "m_s": sched.m_s, "m_l": sched.m_l,
-                        "b": (sched.b_o, *sched.b_s, sched.b_l)})
+                        "b": (sched.b_o, *sched.b_s, sched.b_l),
+                        "sched": sched})
     return {"params": params, "history": history, "wall": wall,
             "final_schedule": sched}

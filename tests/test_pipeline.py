@@ -1,0 +1,260 @@
+"""Pipelined steady-state execution (DESIGN.md §7): T_period model, the
+depth-K DES, and the throughput scheduler objective.
+
+Invariant families:
+
+* **K=1 exactness** — ``simulate_pipeline(K=1)`` is bit-identical to the
+  single-iteration simulators on both topologies (same DAG, same names,
+  same dispatch order).
+* **Model validity** — the measured DES period (the slope of T(K) over
+  large K) converges to the closed-form ``t_period`` /
+  ``t_period_multi``, property-tested over random schedules via the
+  ``tests/_compat`` shim; optimizer-chosen schedules match tightly.
+* **Scalar/batch equality** — ``t_period_batch`` lanes equal the scalar
+  evaluation bit-for-bit (same guarantee the latency cost model gives).
+* **Throughput objective** — ``objective="throughput"`` returns a
+  schedule whose period is <= the latency-optimal schedule's period on
+  every Table II profile, the batched and reference backends agree, and
+  the default latency path is untouched.
+"""
+import numpy as np
+import pytest
+from tests._compat import given, settings, st
+
+from repro.core.cost_model import (MultiProfile, MultiSchedule, Network,
+                                   Schedule, StarNetwork, WIDX)
+from repro.core.pipeline import (t_period, t_period_batch,
+                                 t_period_breakdown, t_period_multi,
+                                 t_period_multi_batch, t_pipeline)
+from repro.core.scheduler import solve, solve_multi
+from repro.core.simulator import (simulate_iteration,
+                                  simulate_iteration_multi,
+                                  simulate_pipeline)
+from tests.test_cost_model import NET, tiny_profile
+from tests.test_multidevice import (MBPS, TABLE2_LAYERS, hetero_net,
+                                    hetero_profile, synthetic_profile)
+
+
+def _random_schedule(seed: int) -> Schedule:
+    rng = np.random.default_rng(seed + 1)
+    B = 12
+    bo = int(rng.integers(1, B - 1))
+    bs = int(rng.integers(0, B - bo))
+    bl = B - bo - bs
+    m_s = int(rng.integers(1, 4)) if bs else 0
+    m_l = int(rng.integers(m_s, 5)) if bl else m_s
+    if m_l == 0 and bl:
+        m_l = 1
+    sched = Schedule("cloud", "device", "edge", m_s, max(m_s, m_l), bo,
+                     bs if m_s else 0, bl if m_l else 0)
+    return Schedule(sched.worker_o, sched.worker_s, sched.worker_l,
+                    sched.m_s, sched.m_l,
+                    B - sched.b_s - sched.b_l, sched.b_s, sched.b_l)
+
+
+def _random_multi(seed: int):
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(1, 5))
+    prof = hetero_profile(5, tuple(1.0 + rng.random(m)))
+    net = hetero_net(m, seed=seed)
+    names = prof.worker_names
+    order = rng.permutation(m + 2)
+    m_l = int(rng.integers(0, 6))
+    m_s = tuple(int(rng.integers(0, m_l + 1)) for _ in range(m))
+    splits = rng.multinomial(24, np.ones(m + 2) / (m + 2))
+    b_s = [int(v) if m_s[i] > 0 else 0
+           for i, v in enumerate(splits[1:1 + m])]
+    b_l = int(splits[1 + m]) if m_l > 0 else 0
+    sched = MultiSchedule(
+        worker_o=names[order[0]], worker_l=names[order[1]],
+        s_workers=tuple(names[i] for i in order[2:]),
+        m_s=m_s, m_l=m_l, b_o=24 - sum(b_s) - b_l, b_s=tuple(b_s),
+        b_l=b_l)
+    return prof, net, sched
+
+
+# ---------------------------------------------------------------------------
+# K=1 exactness
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_pipeline_k1_equals_simulate_iteration(seed):
+    prof = tiny_profile(4, seed=seed)
+    sched = _random_schedule(seed)
+    assert simulate_pipeline(prof, NET, sched, 1) == \
+        simulate_iteration(prof, NET, sched)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_pipeline_k1_equals_simulate_iteration_multi(seed):
+    prof, net, sched = _random_multi(seed)
+    assert simulate_pipeline(prof, net, sched, 1) == \
+        simulate_iteration_multi(prof, net, sched)
+
+
+# ---------------------------------------------------------------------------
+# DES period converges to the closed form
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_des_period_converges_to_t_period(seed):
+    """The measured slope of T(K) approaches t_period.  Tolerance covers
+    residual list-scheduling contention the steady-state model idealizes
+    away (worst observed ~1.4% on adversarial random schedules)."""
+    prof = tiny_profile(4, seed=seed)
+    sched = _random_schedule(seed)
+    meas = (simulate_pipeline(prof, NET, sched, 64) -
+            simulate_pipeline(prof, NET, sched, 32)) / 32
+    model = t_period(prof, NET, sched)
+    assert meas == pytest.approx(model, rel=0.03)
+    # and the period never exceeds the unpipelined iteration latency
+    from repro.core.cost_model import t_total
+    assert model <= t_total(prof, NET, sched).total + 1e-12
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000))
+def test_des_period_converges_to_t_period_multi(seed):
+    prof, net, sched = _random_multi(seed)
+    meas = (simulate_pipeline(prof, net, sched, 64) -
+            simulate_pipeline(prof, net, sched, 32)) / 32
+    assert meas == pytest.approx(t_period_multi(prof, net, sched),
+                                 rel=0.03)
+
+
+@pytest.mark.parametrize("name,n", sorted(TABLE2_LAYERS.items()))
+def test_des_period_exact_on_optimizer_schedules(name, n):
+    """On optimizer-chosen schedules the DES attains the model period
+    essentially exactly (same spirit as the Fig. 6 tight check)."""
+    prof = synthetic_profile(n)
+    net = Network(bw_de=5.0 * MBPS, bw_ec=3.0 * MBPS)
+    for objective in ("latency", "throughput"):
+        sched = solve(prof, net, B=64, objective=objective).schedule
+        meas = (simulate_pipeline(prof, net, sched, 64) -
+                simulate_pipeline(prof, net, sched, 32)) / 32
+        assert meas == pytest.approx(t_period(prof, net, sched),
+                                     rel=1e-6)
+
+
+def test_t_pipeline_is_fill_plus_periods():
+    prof = synthetic_profile(5)
+    net = Network(bw_de=5.0 * MBPS, bw_ec=3.0 * MBPS)
+    sched = solve(prof, net, B=64).schedule
+    from repro.core.cost_model import t_total
+    fill = t_total(prof, net, sched).total
+    per = t_period(prof, net, sched)
+    for K in (1, 2, 7):
+        assert t_pipeline(prof, net, sched, K) == \
+            pytest.approx(fill + (K - 1) * per, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Scalar/batch and M=1 equality
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_t_period_batch_bit_identical_to_scalar(seed):
+    prof = tiny_profile(4, seed=seed)
+    sched = _random_schedule(seed)
+    got = t_period_batch(
+        prof, NET, np.array([WIDX[sched.worker_o]]),
+        np.array([WIDX[sched.worker_s]]), np.array([WIDX[sched.worker_l]]),
+        np.array([sched.m_s]), np.array([sched.m_l]),
+        np.array([[sched.b_o, sched.b_s, sched.b_l]]))
+    assert got[0] == t_period(prof, NET, sched)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_t_period_multi_batch_bit_identical_to_scalar(seed):
+    prof, net, sched = _random_multi(seed)
+    widx = prof.widx
+    got = t_period_multi_batch(
+        prof, net, np.array([widx[sched.worker_o]]),
+        np.array([[widx[w] for w in sched.s_workers]]),
+        np.array([widx[sched.worker_l]]),
+        np.array([list(sched.m_s)]), np.array([sched.m_l]),
+        np.array([[sched.b_o, *sched.b_s, sched.b_l]]))
+    assert got[0] == t_period_multi(prof, net, sched)
+
+
+def test_t_period_multi_m1_matches_three_worker_on_local_schedules():
+    """With no input upload the per-class input pipes are inert, so the
+    M=1 star period equals the 3-worker period exactly (the same local-
+    schedule caveat as the simulator M=1 equivalence)."""
+    prof = synthetic_profile(5)
+    net = Network(bw_de=4.0 * MBPS, bw_ec=2.0 * MBPS)
+    sched = Schedule("device", "edge", "cloud", 2, 4, 10, 12, 10)
+    got = t_period_multi(MultiProfile.from_hier(prof, (1.0,)),
+                         StarNetwork.from_network(net, 1),
+                         MultiSchedule.from_schedule(sched))
+    assert got == t_period(prof, net, sched)
+
+
+def test_t_period_breakdown_names_the_bottleneck():
+    prof = synthetic_profile(5)
+    net = Network(bw_de=5.0 * MBPS, bw_ec=3.0 * MBPS)
+    sched = solve(prof, net, B=64).schedule
+    bd = t_period_breakdown(prof, net, sched)
+    assert bd["period"] == t_period(prof, net, sched)
+    assert bd["arms"][bd["bottleneck"]] == bd["period"]
+
+
+# ---------------------------------------------------------------------------
+# Throughput scheduler objective
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,n", sorted(TABLE2_LAYERS.items()))
+@pytest.mark.parametrize("ec_mbps", [2.0, 3.5])
+def test_throughput_objective_never_worse_period(name, n, ec_mbps):
+    prof = synthetic_profile(n)
+    net = Network(bw_de=5.0 * MBPS, bw_ec=ec_mbps * MBPS)
+    lat = solve(prof, net, B=64)
+    thr = solve(prof, net, B=64, objective="throughput")
+    assert lat.objective == "latency" and thr.objective == "throughput"
+    assert thr.t_period <= lat.t_period
+    assert lat.t_period == t_period(prof, net, lat.schedule)
+    # the latency solver still wins on its own objective
+    assert lat.t_total <= thr.t_total
+
+
+def test_throughput_backends_agree():
+    prof = synthetic_profile(6)
+    net = Network(bw_de=5.0 * MBPS, bw_ec=3.0 * MBPS)
+    rb = solve(prof, net, B=48, objective="throughput")
+    rr = solve(prof, net, B=48, objective="throughput",
+               backend="reference")
+    assert rb.schedule == rr.schedule
+    assert rb.t_period == rr.t_period
+    # pruning never changes the throughput answer either
+    rn = solve(prof, net, B=48, objective="throughput", prune=False)
+    assert rn.t_period == rb.t_period
+
+
+@pytest.mark.parametrize("m,scales", [(2, (1.0, 1.7)),
+                                      (3, (1.0, 1.4, 2.3))])
+def test_throughput_multi_backends_agree_and_never_worse(m, scales):
+    prof = hetero_profile(5, scales)
+    net = hetero_net(m)
+    lat = solve_multi(prof, net, B=48)
+    thr = solve_multi(prof, net, B=48, objective="throughput")
+    ref = solve_multi(prof, net, B=48, objective="throughput",
+                      backend="reference")
+    assert thr.schedule == ref.schedule
+    assert thr.t_period <= lat.t_period
+    assert lat.t_period == t_period_multi(prof, net, lat.schedule)
+
+
+def test_unknown_objective_rejected():
+    prof = synthetic_profile(4)
+    net = Network(bw_de=5.0 * MBPS, bw_ec=3.0 * MBPS)
+    with pytest.raises(ValueError):
+        solve(prof, net, B=8, objective="goodput")
+    with pytest.raises(ValueError):
+        solve_multi(MultiProfile.from_hier(prof, (1.0,)),
+                    StarNetwork.from_network(net, 1), B=8,
+                    objective="goodput")

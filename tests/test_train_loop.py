@@ -88,3 +88,89 @@ def test_hier_loop_straggler_resched():
     late = (hist[-1]["m_s"], hist[-1]["m_l"], hist[-1]["b"])
     assert early != late, "re-scheduler never adapted to the straggler"
     assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def _sched_at(hist, i):
+    return (hist[i]["m_s"], hist[i]["m_l"], hist[i]["b"])
+
+
+def test_hier_loop_straggler_heals_and_recovers():
+    """Regression: a straggler that *heals* must see its schedule restored.
+
+    The pre-fix loop only EMA'd workers the monitor still reported and
+    skipped the re-schedule tick entirely once ``worker_slowdown``
+    returned ``{}``, so the degraded schedule persisted forever after the
+    straggle window ended."""
+    from repro.core.cost_model import Network
+    from repro.core.profiler import ALEXNET_TESTBED, analytic_profile
+    from repro.models.cnn import alexnet_tiny
+
+    model = alexnet_tiny(num_classes=10)
+    profile = analytic_profile(model, ALEXNET_TESTBED)
+    net = Network(bw_de=5e6 / 8, bw_ec=1e6 / 8)
+    data = SyntheticImages(model.input_shape, model.num_classes, 16,
+                           seed=0)
+
+    def slowdown(step):
+        return {"edge": 8.0} if 10 <= step < 25 else {}
+
+    out = run_hier_loop(
+        HierLoopConfig(total_steps=41, batch=16, resched_every=5,
+                       ema=0.8, lr=0.01),
+        model, profile, net, data, worker_slowdown=slowdown)
+    hist = out["history"]
+    base = _sched_at(hist, 5)          # pre-straggle schedule
+    degraded = _sched_at(hist, 20)     # mid-straggle, after a resched tick
+    final = _sched_at(hist, -1)        # well after the straggler healed
+    assert degraded != base, "straggler never degraded the schedule"
+    assert final == base, \
+        "loop did not return to the pre-straggle schedule after recovery"
+
+
+def test_multi_hier_loop_straggler_heals_and_recovers():
+    """Same regression for the M-device loop (worker-name keyed EMA).
+
+    Compared on the *load-bearing* schedule signature — TASK O's owner
+    and sub-batch plus every role that actually carries samples — since
+    cut values on zero-batch roles are cost-degenerate LP artifacts that
+    legitimately wobble at the EMA's float-level residual."""
+    import numpy as np
+
+    from repro.core.cost_model import StarNetwork
+    from repro.core.profiler import multi_analytic_profile
+    from repro.models.cnn import DenseSpec, LayeredModel
+    from repro.train.loop import run_multi_hier_loop
+
+    specs = tuple(DenseSpec(f"fc{i}", 16) for i in range(4)) + \
+        (DenseSpec("out", 5, relu=False),)
+    model = LayeredModel("tiny_mlp", specs, (8,), 5)
+    prof = multi_analytic_profile(model, device_slowdowns=(1.0, 1.2))
+    net = StarNetwork(bw_de=np.array([4.0, 3.0]) * 1e6 / 8,
+                      bw_ec=2.0 * 1e6 / 8)
+    data = SyntheticImages(model.input_shape, model.num_classes, 24,
+                           seed=0)
+
+    def slowdown(step):
+        # the baseline optimum owns the whole batch on the cloud, so the
+        # cloud is the straggler that actually sheds load
+        return {"cloud": 30.0} if 4 <= step < 12 else {}
+
+    def sig(sched):
+        loaded = tuple(sorted(
+            (w, m, b) for w, m, b in zip(sched.s_workers, sched.m_s,
+                                         sched.b_s) if b > 0))
+        return (sched.worker_o, sched.b_o, loaded,
+                (sched.worker_l, sched.m_l, sched.b_l)
+                if sched.b_l > 0 else None)
+
+    cfg = HierLoopConfig(total_steps=28, batch=24, resched_every=4,
+                         ema=0.8)
+    out = run_multi_hier_loop(cfg, model, prof, net, data,
+                              worker_slowdown=slowdown)
+    hist = out["history"]
+    base = sig(hist[2]["sched"])       # pre-straggle
+    degraded = sig(hist[9]["sched"])   # mid-straggle, after a resched tick
+    final = sig(hist[-1]["sched"])     # well after the straggler healed
+    assert degraded != base, "straggler never degraded the schedule"
+    assert final == base, \
+        "loop did not return to the pre-straggle schedule after recovery"
