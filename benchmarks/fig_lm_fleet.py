@@ -1,0 +1,153 @@
+"""LM-fleet scheduling benchmark (beyond the paper — DESIGN.md §8).
+
+Schedules small-but-shaped-like-the-real-thing LM block stacks (four
+families: attention, gla/mamba2, moe, xlstm) across the M-device
+mobile-edge-cloud fleet via the LayerStack adapter
+(:mod:`repro.models.lm.layerstack`), for M in {1, 2, 4}, under both the
+latency and the throughput objective.  Everything here is the *analytic*
+path — cut-point meta, Algorithm-1 LPs, closed-form periods, DES
+validation — so it is deterministic and tracked by the BENCH_sched.json
+drift check.
+
+Activations are bf16 on the wire but gradients return in f32
+(``grad_bytes = 2 * act_bytes``): this is the first committed artifact to
+exercise the cost model's explicit ``MG`` channel.
+
+Workload model: each sample is a *device-resident raw payload* (audio /
+image, ~2 MB) tokenized on-device — the Parallel-Split-Learning regime
+(arXiv:2403.15815) where data gravity, not FLOPs alone, drives the cut.
+The embed cut-point then acts as a 4x wire compressor (2 MB raw ->
+T x D bf16 hidden), which is why latency-optimal schedules ship part of
+the batch through an edge-resident embed front-end; the embedding-table
+gradient sync (2 x MP[embed] per iteration) is what pins those splits to
+the edge rather than the devices and needs a large batch to amortize
+(see EXPERIMENTS.md §LM fleet).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import MBPS, table
+from repro.core.cost_model import MultiSchedule, StarNetwork, t_total_multi
+from repro.core.profiler import LM_TESTBED, multi_analytic_profile
+from repro.core.scheduler import solve_multi
+from repro.core.simulator import simulate_iteration_multi
+from repro.models.lm.layerstack import lm_layerstack
+from repro.models.lm.model import LMConfig
+from repro.models.lm.moe import MoEConfig
+from repro.models.lm.ssm import SSMConfig
+from repro.models.lm.xlstm import XLSTMConfig
+
+SEQ_LEN = 512
+BATCH = 64
+M_SWEEP = (1, 2, 4)
+RAW_SAMPLE_BYTES = 2e6       # on-device raw payload per sequence
+
+# Same deterministic heterogeneity shape as the CNN fleet
+# (benchmarks/common.py), on LTE/WiFi-class radios (raw payloads are MBs).
+LM_FLEET_SLOWDOWNS = (1.0, 1.4, 1.9, 2.5)
+LM_FLEET_UPLINK_MBPS = (50.0, 40.0, 30.0, 25.0)
+LM_BACKHAUL_MBPS = 200.0
+
+# ~120M-parameter-class stacks: big enough that cuts are non-trivial,
+# small enough that the exhaustive stage-A sweep stays sub-second.
+CONFIGS: Dict[str, LMConfig] = {
+    "attention": LMConfig(
+        name="fleet-attn", family="dense", n_layers=12, d_model=512,
+        n_heads=8, n_kv_heads=4, d_ff=1536, vocab=32_000),
+    "gla": LMConfig(
+        name="fleet-gla", family="zamba", n_layers=12, d_model=512,
+        n_heads=8, n_kv_heads=8, d_ff=1536, vocab=32_000,
+        ssm=SSMConfig(d_state=64, head_dim=64, expand=2, chunk=128),
+        shared_attn_every=4),
+    "moe": LMConfig(
+        name="fleet-moe", family="moe", n_layers=10, d_model=512,
+        n_heads=8, n_kv_heads=8, d_ff=1536, vocab=32_000,
+        moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=768)),
+    "xlstm": LMConfig(
+        name="fleet-xlstm", family="xlstm", n_layers=12, d_model=512,
+        n_heads=8, n_kv_heads=8, d_ff=1536, vocab=32_000,
+        xlstm=XLSTMConfig(n_heads=4, expand=2, slstm_every=4, chunk=128)),
+}
+
+
+def lm_star_network(m: int) -> StarNetwork:
+    assert 1 <= m <= len(LM_FLEET_UPLINK_MBPS)
+    return StarNetwork(
+        bw_de=np.array(LM_FLEET_UPLINK_MBPS[:m]) * MBPS,
+        bw_ec=LM_BACKHAUL_MBPS * MBPS)
+
+
+def _single_worker(prof, tier: str) -> MultiSchedule:
+    """All-on-one-worker baseline schedule (everything on ``tier``)."""
+    m = prof.num_devices
+    names = list(prof.worker_names)
+    wo = tier if tier != "device" else names[0]
+    rest = [w for w in names if w != wo]
+    wl = rest[-1]
+    return MultiSchedule(worker_o=wo, worker_l=wl,
+                         s_workers=tuple(rest[:-1]), m_s=(0,) * m, m_l=0,
+                         b_o=BATCH, b_s=(0,) * m, b_l=0)
+
+
+def _rows() -> List[Dict]:
+    rows: List[Dict] = []
+    for family, cfg in CONFIGS.items():
+        stack = lm_layerstack(cfg, seq_len=SEQ_LEN)
+        assert cfg.dtype == jnp.bfloat16  # bf16 fwd / f32 bwd wire (MG)
+        for m in M_SWEEP:
+            prof = multi_analytic_profile(
+                stack, LM_TESTBED, device_slowdowns=LM_FLEET_SLOWDOWNS[:m],
+                sample_bytes=RAW_SAMPLE_BYTES)
+            net = lm_star_network(m)
+            lat = solve_multi(prof, net, BATCH, objective="latency")
+            thr = solve_multi(prof, net, BATCH, objective="throughput")
+            sim = simulate_iteration_multi(prof, net, lat.schedule)
+            t_edge = t_total_multi(prof, net,
+                                   _single_worker(prof, "edge")).total
+            t_cloud = t_total_multi(prof, net,
+                                    _single_worker(prof, "cloud")).total
+            rows.append({
+                "family": family, "M": m, "layers": prof.num_layers,
+                "t_total": lat.t_total,
+                "t_sim": sim,
+                "sim_rel_err": abs(sim - lat.t_total) / lat.t_total,
+                "t_period_lat": lat.t_period,
+                "t_period_thr": thr.t_period,
+                "period_gain": lat.t_period / thr.t_period,
+                "speedup_all_edge": t_edge / lat.t_total,
+                "speedup_all_cloud": t_cloud / lat.t_total,
+                "lps_solved": lat.n_lp_solved,
+                "candidates": lat.n_candidates,
+                "pruned": lat.n_pruned,
+                "schedule_lat": lat.schedule.describe(),
+                "schedule_thr": thr.schedule.describe(),
+            })
+    return rows
+
+
+def run() -> str:
+    rows = _rows()
+    out = [table(rows, ("family", "M", "layers", "t_total", "t_sim",
+                        "sim_rel_err", "t_period_lat", "t_period_thr",
+                        "period_gain", "speedup_all_edge",
+                        "speedup_all_cloud"),
+                 title=f"LM fleet (T={SEQ_LEN}, B={BATCH}, "
+                       f"{RAW_SAMPLE_BYTES/1e6:.0f}MB raw samples, "
+                       f"bf16 fwd / f32 bwd wire)")]
+    for r in rows:
+        out.append(f"  {r['family']:>9} M={r['M']}: "
+                   f"lat [{r['schedule_lat']}]")
+        out.append(f"  {'':>9}      thr [{r['schedule_thr']}]")
+    return "\n".join(out)
+
+
+def run_json() -> List[Dict]:
+    return _rows()
+
+
+if __name__ == "__main__":
+    print(run())

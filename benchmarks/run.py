@@ -4,8 +4,9 @@ roofline report if dry-run results exist.  ``python -m benchmarks.run``.
 ``--json [PATH]`` switches to perf-tracking mode: instead of printing every
 section it re-times the Table II scheduler search with both backends
 (reference scalar simplex vs batched engine) plus the M-device sweep
-(``benchmarks/fig_multidevice``) and the pipelined steady-state sweep
-(``benchmarks/fig_pipeline``), and writes runtimes, speedups, periods and
+(``benchmarks/fig_multidevice``), the pipelined steady-state sweep
+(``benchmarks/fig_pipeline``) and the LM-fleet LayerStack sweep
+(``benchmarks/fig_lm_fleet``), and writes runtimes, speedups, periods and
 the chosen schedules to ``BENCH_sched.json`` (or PATH), so the
 scheduler-engine perf trajectory is tracked across PRs.  Every record is
 stamped with the git SHA (``+dirty`` when regenerated before the commit it
@@ -42,13 +43,18 @@ _DET_KEYS = {
                        "period_rel_err", "period_gain",
                        "speedup_pipelined", "schedule_lat",
                        "schedule_thr"),
+    "lm_fleet": ("family", "M", "layers", "t_total", "t_sim",
+                 "sim_rel_err", "t_period_lat", "t_period_thr",
+                 "period_gain", "speedup_all_edge", "speedup_all_cloud",
+                 "lps_solved", "candidates", "pruned", "schedule_lat",
+                 "schedule_thr"),
 }
 
 
 def run_sections() -> int:
     from benchmarks import (fig6_model_validity, fig7_8_speedup,
-                            fig9_10_sota, fig11_edge_cpu, fig_multidevice,
-                            fig_pipeline, roofline_report,
+                            fig9_10_sota, fig11_edge_cpu, fig_lm_fleet,
+                            fig_multidevice, fig_pipeline, roofline_report,
                             table2_sched_runtime)
     sections = [
         ("Fig.6 model validity", fig6_model_validity.run),
@@ -58,6 +64,7 @@ def run_sections() -> int:
         ("Table II scheduler runtime", table2_sched_runtime.run),
         ("M-device sweep (beyond the paper)", fig_multidevice.run),
         ("Pipelined steady state (T_period)", fig_pipeline.run),
+        ("LM fleet via LayerStack (beyond the paper)", fig_lm_fleet.run),
         ("Roofline report (from dry-run)", roofline_report.run),
     ]
     failures = 0
@@ -76,11 +83,12 @@ def run_sections() -> int:
 
 
 def _build_payload(include_reference: bool = True) -> dict:
-    from benchmarks import fig_multidevice, fig_pipeline, \
+    from benchmarks import fig_lm_fleet, fig_multidevice, fig_pipeline, \
         table2_sched_runtime
     payload = table2_sched_runtime.run_json(include_reference)
     payload["multidevice"] = fig_multidevice.run_json()
     payload["pipeline"] = fig_pipeline.run_json()
+    payload["lm_fleet"] = fig_lm_fleet.run_json()
     return payload
 
 
@@ -108,6 +116,11 @@ def run_sched_json(path: str) -> int:
         print(f"  pipeline M={r['M']}: T_period latency-opt "
               f"{r['t_period_lat']:.3f}s -> throughput-opt "
               f"{r['t_period_thr']:.3f}s ({r['period_gain']:.2f}x)")
+    for r in payload["lm_fleet"]:
+        print(f"  lm {r['family']:>9} M={r['M']}: T_total {r['t_total']:.2f}s "
+              f"(sim err {r['sim_rel_err']:.1%}) vs all-edge "
+              f"{r['speedup_all_edge']:.2f}x / all-cloud "
+              f"{r['speedup_all_cloud']:.2f}x")
     return 0
 
 
@@ -140,6 +153,7 @@ def check_schedules(path: str) -> int:
                             fresh["pipeline"]["table2"]),
         "pipeline.fleet": (committed.get("pipeline", {}).get("fleet", []),
                            fresh["pipeline"]["fleet"]),
+        "lm_fleet": (committed.get("lm_fleet", []), fresh["lm_fleet"]),
     }
     drift = 0
     for name, (old, new) in sections.items():

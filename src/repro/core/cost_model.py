@@ -55,6 +55,12 @@ class HierProfile:
         (``L^u_{j,i}``; batch-size independent).
     MP : ``[N]`` — parameter bytes per layer (``MP_i``).
     MO : ``[N]`` — forward-output bytes per *sample* per layer (``MO_i``).
+    MG : ``[N]`` — backward wire bytes per *sample* at each cut (the
+        activation *gradient* shipped from worker_o back to a TASK-S/L
+        worker).  ``None`` (the default) means "equal to ``MO``" — the
+        paper's §IV-C assumption, under which every cost is bitwise
+        identical to the historical MO-only model.  LM profiles set it
+        explicitly (bf16 activations forward, f32 gradients back).
     sample_bytes : ``Q`` — bytes of one training sample (input + label).
     """
     layer_names: Tuple[str, ...]
@@ -64,6 +70,7 @@ class HierProfile:
     MP: np.ndarray
     MO: np.ndarray
     sample_bytes: float
+    MG: Optional[np.ndarray] = None
 
     def __post_init__(self) -> None:
         self.L_f = np.asarray(self.L_f, np.float64)
@@ -71,10 +78,12 @@ class HierProfile:
         self.L_u = np.asarray(self.L_u, np.float64)
         self.MP = np.asarray(self.MP, np.float64)
         self.MO = np.asarray(self.MO, np.float64)
+        self.MG = self.MO if self.MG is None \
+            else np.asarray(self.MG, np.float64)
         n = self.num_layers
         assert self.L_f.shape == (3, n) and self.L_b.shape == (3, n)
         assert self.L_u.shape == (3, n) and self.MP.shape == (n,)
-        assert self.MO.shape == (n,)
+        assert self.MO.shape == (n,) and self.MG.shape == (n,)
 
     @property
     def num_layers(self) -> int:
@@ -211,22 +220,26 @@ def t_total_batch(profile: HierProfile, net: Network,
     t_in_o, t_in_s, t_in_l = t_in(o_idx, bo), t_in(s_idx, bs), t_in(l_idx, bl)
     mo_s = profile.MO[np.maximum(ms, 1) - 1]   # MO_{m_s} (junk at ms == 0)
     mo_l = profile.MO[np.maximum(ml, 1) - 1]
+    mg_s = profile.MG[np.maximum(ms, 1) - 1]   # backward wire bytes
+    mg_l = profile.MG[np.maximum(ml, 1) - 1]
     t_s_out = np.where((ms > 0) & (bs > 0), bs * mo_s / bw_os, 0.0)
     t_l_out = np.where((ml > 0) & (bl > 0), bl * mo_l / bw_ol, 0.0)
+    t_s_gout = np.where((ms > 0) & (bs > 0), bs * mg_s / bw_os, 0.0)
+    t_l_gout = np.where((ml > 0) & (bl > 0), bl * mg_l / bw_ol, 0.0)
 
     # --- Eq. (5)/(6): layers 1..m_s on all three workers ----------------
     t_f1 = np.maximum(np.maximum(t_in_o + bo * F[o_idx, ms],
                                  t_in_s + bs * F[s_idx, ms] + t_s_out),
                       t_in_l + bl * F[l_idx, ms])
     t_b1 = np.maximum(np.maximum(bo * Bk[o_idx, ms],
-                                 bs * Bk[s_idx, ms] + t_s_out),
+                                 bs * Bk[s_idx, ms] + t_s_gout),
                       bl * Bk[l_idx, ms])
 
     # --- Eq. (7)/(8): layers m_s+1..m_l ---------------------------------
     t_f2 = np.maximum((bo + bs) * (F[o_idx, ml] - F[o_idx, ms]),
                       bl * (F[l_idx, ml] - F[l_idx, ms]) + t_l_out)
     t_b2 = np.maximum((bo + bs) * (Bk[o_idx, ml] - Bk[o_idx, ms]),
-                      bl * (Bk[l_idx, ml] - Bk[l_idx, ms]) + t_l_out)
+                      bl * (Bk[l_idx, ml] - Bk[l_idx, ms]) + t_l_gout)
 
     # --- Eq. (9)/(10): layers m_l+1..N with the full batch --------------
     B = bo + bs + bl
@@ -264,9 +277,10 @@ def t_total_batch(profile: HierProfile, net: Network,
 class MultiProfile:
     """Profiling-stage output for the M-device star topology.
 
-    Same per-layer quantities as :class:`HierProfile`, but with one row per
-    worker in ``worker_names`` order: ``M`` device rows first, then
-    ``"edge"``, then ``"cloud"`` (so ``L_f`` is ``[M+2, N]``).
+    Same per-layer quantities as :class:`HierProfile` (including the
+    optional backward wire bytes ``MG``, defaulting to ``MO``), but with
+    one row per worker in ``worker_names`` order: ``M`` device rows first,
+    then ``"edge"``, then ``"cloud"`` (so ``L_f`` is ``[M+2, N]``).
     """
     layer_names: Tuple[str, ...]
     worker_names: Tuple[str, ...]
@@ -276,6 +290,7 @@ class MultiProfile:
     MP: np.ndarray
     MO: np.ndarray
     sample_bytes: float
+    MG: Optional[np.ndarray] = None
 
     def __post_init__(self) -> None:
         self.L_f = np.asarray(self.L_f, np.float64)
@@ -283,12 +298,14 @@ class MultiProfile:
         self.L_u = np.asarray(self.L_u, np.float64)
         self.MP = np.asarray(self.MP, np.float64)
         self.MO = np.asarray(self.MO, np.float64)
+        self.MG = self.MO if self.MG is None \
+            else np.asarray(self.MG, np.float64)
         n, w = self.num_layers, self.num_workers
         assert w >= 3 and self.worker_names[-2:] == ("edge", "cloud")
         assert len(set(self.worker_names)) == w, "duplicate worker name"
         assert self.L_f.shape == (w, n) and self.L_b.shape == (w, n)
         assert self.L_u.shape == (w, n) and self.MP.shape == (n,)
-        assert self.MO.shape == (n,)
+        assert self.MO.shape == (n,) and self.MG.shape == (n,)
 
     @property
     def num_layers(self) -> int:
@@ -346,14 +363,15 @@ class MultiProfile:
         return cls(layer_names=profile.layer_names, worker_names=names,
                    L_f=lift(profile.L_f), L_b=lift(profile.L_b),
                    L_u=lift(profile.L_u), MP=profile.MP, MO=profile.MO,
-                   sample_bytes=profile.sample_bytes)
+                   sample_bytes=profile.sample_bytes, MG=profile.MG)
 
     def three_worker(self) -> HierProfile:
         """The exact 3-worker profile (requires ``M == 1``)."""
         assert self.num_devices == 1, "only an M=1 profile reduces"
         return HierProfile(layer_names=self.layer_names, L_f=self.L_f,
                            L_b=self.L_b, L_u=self.L_u, MP=self.MP,
-                           MO=self.MO, sample_bytes=self.sample_bytes)
+                           MO=self.MO, sample_bytes=self.sample_bytes,
+                           MG=self.MG)
 
 
 @dataclasses.dataclass
@@ -509,6 +527,11 @@ def t_total_multi(profile: MultiProfile, net: StarNetwork,
                for si, mi, bi in zip(s, sched.m_s, bs)]
     t_l_out = bl * profile.MO[ml - 1] / bwm[o, l] \
         if (ml > 0 and bl > 0) else 0.0
+    t_s_gout = [bi * profile.MG[mi - 1] / bwm[o, si]
+                if (mi > 0 and bi > 0) else 0.0
+                for si, mi, bi in zip(s, sched.m_s, bs)]
+    t_l_gout = bl * profile.MG[ml - 1] / bwm[o, l] \
+        if (ml > 0 and bl > 0) else 0.0
 
     # --- phase 1: every front-end in parallel up to its own cut ----------
     t_f1 = max(t_in_o + bo * F[o, msmax],
@@ -517,7 +540,7 @@ def t_total_multi(profile: MultiProfile, net: StarNetwork,
                t_in_l + bl * F[l, msmax])
     t_b1 = max(bo * Bk[o, msmax],
                *[bi * Bk[si, mi] + to for si, mi, bi, to in
-                 zip(s, sched.m_s, bs, t_s_out)],
+                 zip(s, sched.m_s, bs, t_s_gout)],
                bl * Bk[l, msmax])
 
     # --- phase 2: worker_o catches every stream up, then the common block -
@@ -529,7 +552,7 @@ def t_total_multi(profile: MultiProfile, net: StarNetwork,
     t_f2 = max((bo + bs_sum) * (F[o, ml] - F[o, msmax]) + catch_f,
                bl * (F[l, ml] - F[l, msmax]) + t_l_out)
     t_b2 = max((bo + bs_sum) * (Bk[o, ml] - Bk[o, msmax]) + catch_b,
-               bl * (Bk[l, ml] - Bk[l, msmax]) + t_l_out)
+               bl * (Bk[l, ml] - Bk[l, msmax]) + t_l_gout)
 
     # --- phase 3 + weight update (as in the three-worker model) ----------
     B = bo + bs_sum + bl
@@ -548,7 +571,8 @@ def t_total_multi(profile: MultiProfile, net: StarNetwork,
         t_f1=t_f1, t_b1=t_b1, t_f2=t_f2, t_b2=t_b2, t_f3=t_f3, t_b3=t_b3,
         t_update=t_update,
         comm_input=t_in_o + sum(t_in_s) + t_in_l,
-        comm_activation=2.0 * (sum(t_s_out) + t_l_out),
+        comm_activation=(sum(t_s_out) + t_l_out) +
+                        (sum(t_s_gout) + t_l_gout),
         comm_weightgrad=max(*t_wg_s, t_wg_l),
     )
 
@@ -587,8 +611,12 @@ def t_total_multi_batch(profile: MultiProfile, net: StarNetwork,
     t_in_o, t_in_s, t_in_l = t_in(o_idx, bo), t_in(s_idx, bs), t_in(l_idx, bl)
     mo_s = profile.MO[np.maximum(ms, 1) - 1]
     mo_l = profile.MO[np.maximum(ml, 1) - 1]
+    mg_s = profile.MG[np.maximum(ms, 1) - 1]
+    mg_l = profile.MG[np.maximum(ml, 1) - 1]
     t_s_out = np.where((ms > 0) & (bs > 0), bs * mo_s / bw_os, 0.0)
     t_l_out = np.where((ml > 0) & (bl > 0), bl * mo_l / bw_ol, 0.0)
+    t_s_gout = np.where((ms > 0) & (bs > 0), bs * mg_s / bw_os, 0.0)
+    t_l_gout = np.where((ml > 0) & (bl > 0), bl * mg_l / bw_ol, 0.0)
 
     # --- phase 1 ---------------------------------------------------------
     t_f1 = np.maximum(np.maximum(t_in_o + bo * F[o_idx, msmax],
@@ -596,7 +624,8 @@ def t_total_multi_batch(profile: MultiProfile, net: StarNetwork,
                                   t_s_out).max(axis=1)),
                       t_in_l + bl * F[l_idx, msmax])
     t_b1 = np.maximum(np.maximum(bo * Bk[o_idx, msmax],
-                                 (bs * Bk[s_idx, ms] + t_s_out).max(axis=1)),
+                                 (bs * Bk[s_idx, ms] +
+                                  t_s_gout).max(axis=1)),
                       bl * Bk[l_idx, msmax])
 
     # --- phase 2 (catch-up + common block) -------------------------------
@@ -608,7 +637,7 @@ def t_total_multi_batch(profile: MultiProfile, net: StarNetwork,
         bl * (F[l_idx, ml] - F[l_idx, msmax]) + t_l_out)
     t_b2 = np.maximum(
         (bo + bs_sum) * (Bk[o_idx, ml] - Bk[o_idx, msmax]) + catch_b,
-        bl * (Bk[l_idx, ml] - Bk[l_idx, msmax]) + t_l_out)
+        bl * (Bk[l_idx, ml] - Bk[l_idx, msmax]) + t_l_gout)
 
     # --- phase 3 + update ------------------------------------------------
     B = bo + bs_sum + bl
@@ -655,23 +684,26 @@ def t_total(profile: HierProfile, net: Network, sched: Schedule,
     t_in_o = t_input(profile, net, sched.worker_o, bo, origin)
     t_in_s = t_input(profile, net, sched.worker_s, bs, origin)
     t_in_l = t_input(profile, net, sched.worker_l, bl, origin)
-    # T_{s,output} = b_s * MO_{m_s} / B_{o,s}; T_{s,grad} equals it.  (§IV-C)
+    # T_{s,output} = b_s * MO_{m_s} / B_{o,s}  (§IV-C); T_{s,grad} uses the
+    # backward wire bytes MG_{m_s} (== MO by default, LM profiles differ).
     t_s_out = bs * profile.MO[ms - 1] / bw_os if (ms > 0 and bs > 0) else 0.0
     t_l_out = bl * profile.MO[ml - 1] / bw_ol if (ml > 0 and bl > 0) else 0.0
+    t_s_gout = bs * profile.MG[ms - 1] / bw_os if (ms > 0 and bs > 0) else 0.0
+    t_l_gout = bl * profile.MG[ml - 1] / bw_ol if (ml > 0 and bl > 0) else 0.0
 
     # --- Eq. (5)/(6): layers 1..m_s on all three workers ----------------
     t_f1 = max(t_in_o + bo * F[o, ms],
                t_in_s + bs * F[s, ms] + t_s_out,
                t_in_l + bl * F[l, ms])
     t_b1 = max(bo * Bk[o, ms],
-               bs * Bk[s, ms] + t_s_out,
+               bs * Bk[s, ms] + t_s_gout,
                bl * Bk[l, ms])
 
     # --- Eq. (7)/(8): layers m_s+1..m_l on worker_o (b_o+b_s) & worker_l -
     t_f2 = max((bo + bs) * (F[o, ml] - F[o, ms]),
                bl * (F[l, ml] - F[l, ms]) + t_l_out)
     t_b2 = max((bo + bs) * (Bk[o, ml] - Bk[o, ms]),
-               bl * (Bk[l, ml] - Bk[l, ms]) + t_l_out)
+               bl * (Bk[l, ml] - Bk[l, ms]) + t_l_gout)
 
     # --- Eq. (9)/(10): layers m_l+1..N on worker_o with the full batch ---
     B = bo + bs + bl
@@ -693,6 +725,6 @@ def t_total(profile: HierProfile, net: Network, sched: Schedule,
         t_f1=t_f1, t_b1=t_b1, t_f2=t_f2, t_b2=t_b2, t_f3=t_f3, t_b3=t_b3,
         t_update=t_update,
         comm_input=t_in_o + t_in_s + t_in_l,
-        comm_activation=2.0 * (t_s_out + t_l_out),
+        comm_activation=(t_s_out + t_l_out) + (t_s_gout + t_l_gout),
         comm_weightgrad=max(t_wg_s, t_wg_l),
     )

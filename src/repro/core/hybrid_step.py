@@ -14,6 +14,15 @@ exactness).  Two entry points:
   own cut, in ascending-cut order.  With ``M = 1`` the traced program is
   identical to :func:`hybrid_sgd_step`.
 
+Every entry point is model-agnostic (DESIGN.md §8): it takes anything
+:func:`repro.core.layerstack.as_layerstack` accepts — a bare
+:class:`repro.models.cnn.LayeredModel` (traced bit-identically to the
+pre-adapter code) or an adapter such as the LM model-zoo stack.  The stack
+contract is what makes the routing generic: ``params`` is a list with one
+pytree per cut-point, ``apply_segment`` runs a contiguous cut range, and
+``sum_loss`` is the per-sample-*sum* objective (so one division by ``B``
+yields exact batch-B SGD).
+
 The three-worker forward routing (Fig. 4):
 
 * ``worker_s``: layers ``1..m_s`` on its ``b_s`` samples -> ships ``h_s``.
@@ -29,29 +38,28 @@ per-layer gradient exchange over the *shared* frontend only.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Sequence, Tuple
+from collections import OrderedDict
+from typing import Any, Callable, Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.cost_model import MultiSchedule, Schedule
-from repro.models.cnn import LayeredModel
+from repro.core.layerstack import as_layerstack
 
-Params = List[Dict[str, jax.Array]]
-
-
-def _sum_nll(model: LayeredModel, logits: jax.Array,
-             labels: jax.Array) -> jax.Array:
-    logp = jax.nn.log_softmax(logits, axis=-1)
-    return -jnp.sum(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+Params = List[Any]
 
 
-def reference_sgd_step(model: LayeredModel, params: Params, x: jax.Array,
+def reference_sgd_step(model, params: Params, x: jax.Array,
                        y: jax.Array, lr: float) -> Tuple[Params, jax.Array]:
     """Vanilla full-batch SGD step: the ground truth the hybrid step must
     reproduce."""
+    stack = as_layerstack(model)
+    N = stack.num_layers
+
     def loss_fn(p):
-        return _sum_nll(model, model.apply(p, x), y) / x.shape[0]
+        return stack.sum_loss(stack.apply_segment(p, x, 0, N), y) / \
+            x.shape[0]
     loss, grads = jax.value_and_grad(loss_fn)(params)
     new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
     return new, loss
@@ -69,7 +77,7 @@ def split_batch(x: jax.Array, y: jax.Array, sched: Schedule
     }
 
 
-def hybrid_sgd_step(model: LayeredModel, params: Params,
+def hybrid_sgd_step(model, params: Params,
                     batches: Dict[str, Tuple[jax.Array, jax.Array]],
                     m_s: int, m_l: int, lr: float
                     ) -> Tuple[Params, jax.Array]:
@@ -78,7 +86,8 @@ def hybrid_sgd_step(model: LayeredModel, params: Params,
     ``params`` plays the role of the consensus weights each worker starts
     the iteration with (they are equal after every weight-update phase).
     """
-    N = model.num_layers
+    stack = as_layerstack(model)
+    N = stack.num_layers
     assert 0 <= m_s <= m_l <= N
     x_o, y_o = batches["o"]
     x_s, y_s = batches["s"]
@@ -93,16 +102,16 @@ def hybrid_sgd_step(model: LayeredModel, params: Params,
 
     def iteration_loss(p_o: Params, p_s: Params, p_l: Params) -> jax.Array:
         # --- forward phase (Fig. 4 routing) ---
-        h_s = model.apply_segment(p_s, x_s, 0, m_s) if b_s else None
-        h_l = model.apply_segment(p_l, x_l, 0, m_l) if b_l else None
-        a_o = model.apply_segment(p_o, x_o, 0, m_s)
+        h_s = stack.apply_segment(p_s, x_s, 0, m_s) if b_s else None
+        h_l = stack.apply_segment(p_l, x_l, 0, m_l) if b_l else None
+        a_o = stack.apply_segment(p_o, x_o, 0, m_s)
         # worker_o continues its own + s's samples through m_s+1..m_l.
         mid_in = a_o if h_s is None else jnp.concatenate([a_o, h_s], axis=0)
-        mid = model.apply_segment(p_o, mid_in, m_s, m_l)
+        mid = stack.apply_segment(p_o, mid_in, m_s, m_l)
         tail_in = mid if h_l is None else jnp.concatenate([mid, h_l], axis=0)
-        logits = model.apply_segment(p_o, tail_in, m_l, N)
+        logits = stack.apply_segment(p_o, tail_in, m_l, N)
         labels = jnp.concatenate([y_o, y_s, y_l], axis=0)
-        return _sum_nll(model, logits, labels)
+        return stack.sum_loss(logits, labels)
 
     total_loss, (g_o, g_s, g_l) = jax.value_and_grad(
         iteration_loss, argnums=(0, 1, 2))(p_o, p_s, p_l)
@@ -122,7 +131,7 @@ def hybrid_sgd_step(model: LayeredModel, params: Params,
     return new_params, total_loss / B
 
 
-def hybrid_step_from_schedule(model: LayeredModel, params: Params,
+def hybrid_step_from_schedule(model, params: Params,
                               x: jax.Array, y: jax.Array, sched: Schedule,
                               lr: float) -> Tuple[Params, jax.Array]:
     return hybrid_sgd_step(model, params, split_batch(x, y, sched),
@@ -155,7 +164,7 @@ def multi_split_batch(x: jax.Array, y: jax.Array, sched: MultiSchedule
     return out
 
 
-def multi_hybrid_sgd_step(model: LayeredModel, params: Params,
+def multi_hybrid_sgd_step(model, params: Params,
                           batches: Dict[str, object],
                           m_s: Sequence[int], m_l: int, lr: float
                           ) -> Tuple[Params, jax.Array]:
@@ -165,7 +174,8 @@ def multi_hybrid_sgd_step(model: LayeredModel, params: Params,
     scaled once by ``1/B``.  With ``M = 1`` and the same schedule this
     traces the identical program to :func:`hybrid_sgd_step`.
     """
-    N = model.num_layers
+    stack = as_layerstack(model)
+    N = stack.num_layers
     m_s = tuple(int(m) for m in m_s)
     M = len(m_s)
     x_o, y_o = batches["o"]
@@ -188,24 +198,24 @@ def multi_hybrid_sgd_step(model: LayeredModel, params: Params,
     def iteration_loss(p_o: Params, p_s: List[Params], p_l: Params
                        ) -> jax.Array:
         # --- forward: every front-end up to its own cut ---
-        h = [model.apply_segment(p_s[i], s_streams[i][0], 0, m_s[i])
+        h = [stack.apply_segment(p_s[i], s_streams[i][0], 0, m_s[i])
              if b_s[i] else None for i in range(M)]
-        h_l = model.apply_segment(p_l, x_l, 0, m_l) if b_l else None
+        h_l = stack.apply_segment(p_l, x_l, 0, m_l) if b_l else None
         # worker_o walks its segment list, merging arrivals at their cuts.
         cur = x_o
         prev = 0
         for i in join_order:
             if m_s[i] != prev:
-                cur = model.apply_segment(p_o, cur, prev, m_s[i])
+                cur = stack.apply_segment(p_o, cur, prev, m_s[i])
                 prev = m_s[i]
             cur = jnp.concatenate([cur, h[i]], axis=0)
-        cur = model.apply_segment(p_o, cur, prev, m_l)
+        cur = stack.apply_segment(p_o, cur, prev, m_l)
         if h_l is not None:
             cur = jnp.concatenate([cur, h_l], axis=0)
-        logits = model.apply_segment(p_o, cur, m_l, N)
+        logits = stack.apply_segment(p_o, cur, m_l, N)
         labels = jnp.concatenate(
             [y_o] + [s_streams[i][1] for i in join_order] + [y_l], axis=0)
-        return _sum_nll(model, logits, labels)
+        return stack.sum_loss(logits, labels)
 
     total_loss, (g_o, g_s, g_l) = jax.value_and_grad(
         iteration_loss, argnums=(0, 1, 2))(p_o, p_s, p_l)
@@ -224,7 +234,7 @@ def multi_hybrid_sgd_step(model: LayeredModel, params: Params,
     return new_params, total_loss / B
 
 
-def multi_hybrid_step_from_schedule(model: LayeredModel, params: Params,
+def multi_hybrid_step_from_schedule(model, params: Params,
                                     x: jax.Array, y: jax.Array,
                                     sched: MultiSchedule, lr: float
                                     ) -> Tuple[Params, jax.Array]:
@@ -236,33 +246,90 @@ def multi_hybrid_step_from_schedule(model: LayeredModel, params: Params,
 # ---------------------------------------------------------------------------
 # Compiled fast path.  The cuts and learning rate are static (they select
 # the program structure), the params are donated (the step consumes the old
-# consensus weights and returns the new ones), and compiled steps are cached
-# so a training loop that re-solves its schedule only pays retracing when
-# the cuts actually change.  The cache holds a strong reference to each
-# model (the closures need it), which is fine at "handful of CNNs" scale.
+# consensus weights and returns the new ones), and compiled steps live in a
+# *bounded LRU*: with the LM config zoo reachable through the LayerStack
+# adapter, the seed's grow-forever dict (which pinned every model through
+# the compiled closures) would leak models and executables across a long
+# session.  Keys use an id-based weak model handle; the cache entry pins
+# the model only while cached — the id can therefore never be recycled
+# while its entry is live, and eviction (or :func:`clear_jit_cache`)
+# releases both the executable and the model.
 # ---------------------------------------------------------------------------
 
-_JIT_CACHE: Dict[Tuple, Callable] = {}
+JIT_CACHE_SIZE = 32
 
 
-def jitted_hybrid_step(model: LayeredModel, m_s: int, m_l: int,
-                       lr: float) -> Callable:
+class _JitStepCache:
+    """Bounded LRU of compiled step functions.
+
+    ``key`` is ``(kind, id(model), *static_args)``.  The value stores the
+    compiled function *and* the model it closed over: the pin is what makes
+    the id-keyed handle sound (a live key's id cannot be reused by a new
+    model), and dropping the entry releases the model for GC — the seed
+    cache held every model forever.
+    """
+
+    def __init__(self, maxsize: int = JIT_CACHE_SIZE) -> None:
+        assert maxsize >= 1
+        self.maxsize = maxsize
+        self._entries: "OrderedDict[Tuple, Tuple[Callable, Any]]" = \
+            OrderedDict()
+
+    def get(self, key: Tuple) -> Callable | None:
+        entry = self._entries.get(key)
+        if entry is None:
+            return None
+        self._entries.move_to_end(key)
+        return entry[0]
+
+    def put(self, key: Tuple, fn: Callable, model: Any) -> None:
+        self._entries[key] = (fn, model)
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Tuple) -> bool:
+        return key in self._entries
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+
+_JIT_CACHE = _JitStepCache()
+
+
+def clear_jit_cache() -> None:
+    """Drop every cached compiled step (releases the pinned models)."""
+    _JIT_CACHE.clear()
+
+
+def _cached_step(key: Tuple, model, make: Callable[[], Callable]
+                 ) -> Callable:
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        fn = make()
+        _JIT_CACHE.put(key, fn, model)
+    return fn
+
+
+def jitted_hybrid_step(model, m_s: int, m_l: int, lr: float) -> Callable:
     """A compiled ``(params, batches) -> (new_params, loss)`` hybrid step
     with static ``(m_s, m_l, lr)`` and donated ``params``.  jax.jit still
     specializes on the batch-split shapes at first call, so one compiled
     step serves every iteration with the same schedule."""
     key = ("hybrid", id(model), int(m_s), int(m_l), float(lr))
-    fn = _JIT_CACHE.get(key)
-    if fn is None:
+
+    def make():
         def step(params: Params, batches):
             return hybrid_sgd_step(model, params, batches, m_s, m_l, lr)
-        fn = jax.jit(step, donate_argnums=0)
-        _JIT_CACHE[key] = fn
-        _JIT_CACHE[key + ("model",)] = model  # keep id(model) valid
-    return fn
+        return jax.jit(step, donate_argnums=0)
+    return _cached_step(key, model, make)
 
 
-def jitted_multi_hybrid_step(model: LayeredModel, m_s: Sequence[int],
+def jitted_multi_hybrid_step(model, m_s: Sequence[int],
                              m_l: int, lr: float) -> Callable:
     """Compiled ``(params, batches) -> (new_params, loss)`` M-stream hybrid
     step; the cut tuple ``(m_s, m_l)`` and ``lr`` are static, ``params`` is
@@ -270,29 +337,25 @@ def jitted_multi_hybrid_step(model: LayeredModel, m_s: Sequence[int],
     :func:`jitted_hybrid_step`."""
     cuts = tuple(int(m) for m in m_s)
     key = ("multi", id(model), cuts, int(m_l), float(lr))
-    fn = _JIT_CACHE.get(key)
-    if fn is None:
+
+    def make():
         def step(params: Params, batches):
             return multi_hybrid_sgd_step(model, params, batches, cuts,
                                          m_l, lr)
-        fn = jax.jit(step, donate_argnums=0)
-        _JIT_CACHE[key] = fn
-        _JIT_CACHE[key + ("model",)] = model
-    return fn
+        return jax.jit(step, donate_argnums=0)
+    return _cached_step(key, model, make)
 
 
-def jitted_reference_step(model: LayeredModel, lr: float) -> Callable:
+def jitted_reference_step(model, lr: float) -> Callable:
     """Compiled ``(params, x, y) -> (new_params, loss)`` vanilla SGD step
     (static ``lr``, donated ``params``)."""
     key = ("reference", id(model), float(lr))
-    fn = _JIT_CACHE.get(key)
-    if fn is None:
+
+    def make():
         def step(params: Params, x: jax.Array, y: jax.Array):
             return reference_sgd_step(model, params, x, y, lr)
-        fn = jax.jit(step, donate_argnums=0)
-        _JIT_CACHE[key] = fn
-        _JIT_CACHE[key + ("model",)] = model
-    return fn
+        return jax.jit(step, donate_argnums=0)
+    return _cached_step(key, model, make)
 
 
 # ---------------------------------------------------------------------------
@@ -313,20 +376,23 @@ class TrafficReport:
             self.weightgrad_bytes
 
 
-def traffic(model: LayeredModel, sched: Schedule, sample_bytes: float,
+def traffic(model, sched: Schedule, sample_bytes: float,
             origin: str = "device") -> TrafficReport:
-    metas = model.layer_meta()
+    stack = as_layerstack(model)
+    metas = stack.cut_meta()
     inp = sum(b * sample_bytes for b, w in
               ((sched.b_o, sched.worker_o), (sched.b_s, sched.worker_s),
                (sched.b_l, sched.worker_l)) if w != origin)
     act = 0.0
     if sched.m_s > 0 and sched.b_s > 0 and sched.worker_s != sched.worker_o:
-        act += 2.0 * sched.b_s * metas[sched.m_s - 1].out_bytes
+        m = metas[sched.m_s - 1]
+        act += sched.b_s * (m.act_bytes + m.resolved_grad_bytes)
     if sched.m_l > 0 and sched.b_l > 0 and sched.worker_l != sched.worker_o:
-        act += 2.0 * sched.b_l * metas[sched.m_l - 1].out_bytes
+        m = metas[sched.m_l - 1]
+        act += sched.b_l * (m.act_bytes + m.resolved_grad_bytes)
     wg = 0.0
     if sched.b_s > 0 and sched.worker_s != sched.worker_o:
-        wg += 2.0 * sum(m.param_bytes for m in metas[:sched.m_s])
+        wg += 2.0 * sum(m.resolved_param_bytes for m in metas[:sched.m_s])
     if sched.b_l > 0 and sched.worker_l != sched.worker_o:
-        wg += 2.0 * sum(m.param_bytes for m in metas[:sched.m_l])
+        wg += 2.0 * sum(m.resolved_param_bytes for m in metas[:sched.m_l])
     return TrafficReport(inp, act, wg)

@@ -1,0 +1,208 @@
+"""Model-agnostic ``LayerStack`` adapter protocol (DESIGN.md §8).
+
+The HierTrain pipeline — profiling stage, Algorithm-1 scheduler, hybrid
+execution engine, DES and train loops — schedules a *generic* ordered chain
+of cut-points, but the seed implementation was hard-wired to
+:class:`repro.models.cnn.LayeredModel`.  This module is the seam that opens
+the core to any layered model:
+
+* :class:`CutMeta` — the per-cut-point quantities the profiling stage needs
+  (``flops_fwd`` / ``flops_bwd`` / ``param_count`` / ``param_bytes`` /
+  ``act_bytes`` / ``grad_bytes``, all *per sample* where applicable).
+* :class:`LayerStack` — the execution + metadata protocol: ``init`` /
+  ``apply_segment`` / ``sum_loss`` over a params *list with one entry per
+  cut-point* (slicing ``params[:m]`` is what hands a TASK-S/L worker its
+  frontend copy).
+* :class:`CnnLayerStack` — the CNN adapter.  It delegates every operation
+  to the wrapped :class:`~repro.models.cnn.LayeredModel` unchanged, so the
+  traced programs, profiles and schedules of the legacy path are preserved
+  **bit-for-bit** (the adapter-equivalence suite asserts ``==``).
+* :func:`as_layerstack` — coercion used at every core entry point, so
+  existing call sites that pass a bare ``LayeredModel`` keep working.
+
+The second implementation — the LM model-zoo adapter over
+``build_model(LMConfig)`` block stacks — lives in
+:mod:`repro.models.lm.layerstack`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.cnn import LayeredModel
+
+Params = List[Any]   # one pytree per cut-point
+
+
+@dataclasses.dataclass(frozen=True)
+class CutMeta:
+    """Profiling-stage metadata of one cut-point (paper §III).
+
+    ``flops_fwd`` and the wire sizes are per *sample*; ``param_count`` /
+    ``param_bytes`` are absolute.  Two fields are optional with
+    model-family defaults:
+
+    * ``flops_bwd`` — ``None`` means "derive from the profiler's
+      ``bwd_fwd_ratio``" (the seed CNN behaviour, kept so CNN profiles stay
+      bitwise identical: the profiler then evaluates the exact historical
+      expression ``ratio * flops_fwd / flops_per_sec + overhead``).
+    * ``grad_bytes`` — backward wire bytes at this cut (the activation
+      gradient shipped from worker_o back to a TASK-S/L worker).  ``None``
+      means "equal to ``act_bytes``", the paper's §IV-C assumption.  LM
+      stacks override it: bf16 activations go forward but f32 gradients
+      come back.
+    """
+    name: str
+    param_count: int
+    flops_fwd: float
+    act_bytes: float
+    flops_bwd: Optional[float] = None
+    param_bytes: Optional[float] = None
+    grad_bytes: Optional[float] = None
+
+    @property
+    def resolved_param_bytes(self) -> float:
+        return 4.0 * self.param_count if self.param_bytes is None \
+            else float(self.param_bytes)
+
+    @property
+    def resolved_grad_bytes(self) -> float:
+        return float(self.act_bytes) if self.grad_bytes is None \
+            else float(self.grad_bytes)
+
+
+class LayerStack:
+    """Protocol every schedulable model adapter implements.
+
+    A stack is an ordered chain of ``num_layers`` cut-points.  ``params``
+    is always a Python list with exactly one (arbitrary pytree) entry per
+    cut-point, so the hybrid engine can slice frontend copies
+    (``params[:m_s]``) and aggregate per-cut gradients.
+
+    Subclasses must provide:
+
+    * ``name`` — attribute or property; used in profiles and logs.
+    * :meth:`cut_meta` — one :class:`CutMeta` per cut-point.
+    * :meth:`init` — ``key -> params`` list.
+    * :meth:`apply_segment` — run cut-points ``start..stop-1`` on batch
+      ``x`` (``params`` is the *full* list, indexed absolutely).
+    * :meth:`sum_loss` — per-sample-**sum** training loss of the final
+      segment output (the hybrid engine divides by the global batch once,
+      which is what makes the distributed update exactly batch-B SGD).
+    * :meth:`default_sample_bytes` — bytes of one training sample
+      (input + label), the profile's ``Q``.
+    * :meth:`dummy_batch` — a ``(x, labels)`` batch for measurement /
+      smoke paths.
+    """
+
+    name: str = "layerstack"
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.cut_meta())
+
+    def cut_meta(self) -> List[CutMeta]:
+        raise NotImplementedError
+
+    def default_sample_bytes(self) -> float:
+        raise NotImplementedError
+
+    def init(self, key: jax.Array) -> Params:
+        raise NotImplementedError
+
+    def apply_segment(self, params: Params, x: jax.Array, start: int,
+                      stop: int) -> jax.Array:
+        raise NotImplementedError
+
+    def sum_loss(self, out: jax.Array, labels: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def dummy_batch(self, key: jax.Array, batch: int
+                    ) -> Tuple[jax.Array, jax.Array]:
+        raise NotImplementedError
+
+    # ---- conveniences shared by every adapter --------------------------
+
+    def apply(self, params: Params, x: jax.Array) -> jax.Array:
+        return self.apply_segment(params, x, 0, self.num_layers)
+
+    def meta_arrays(self) -> dict:
+        """``{names, MP, MO, MG}`` profile columns from :meth:`cut_meta`."""
+        metas = self.cut_meta()
+        return {
+            "names": tuple(m.name for m in metas),
+            "MP": np.array([m.resolved_param_bytes for m in metas],
+                           np.float64),
+            "MO": np.array([float(m.act_bytes) for m in metas], np.float64),
+            "MG": np.array([m.resolved_grad_bytes for m in metas],
+                           np.float64),
+        }
+
+
+@dataclasses.dataclass
+class CnnLayerStack(LayerStack):
+    """The paper's layered CNNs behind the :class:`LayerStack` protocol.
+
+    Every method delegates to the wrapped :class:`LayeredModel`, producing
+    the identical traced program / metadata the pre-adapter code produced
+    (``grad_bytes`` defaults to ``act_bytes`` and ``flops_bwd`` to the
+    profiler ratio, so profiles are bitwise unchanged).
+    """
+    model: LayeredModel
+
+    @property
+    def name(self) -> str:                        # type: ignore[override]
+        return self.model.name
+
+    @property
+    def num_layers(self) -> int:
+        return self.model.num_layers
+
+    def cut_meta(self) -> List[CutMeta]:
+        return [CutMeta(name=m.name, param_count=m.param_count,
+                        flops_fwd=float(m.flops_fwd),
+                        act_bytes=float(m.out_bytes),
+                        param_bytes=float(m.param_bytes))
+                for m in self.model.layer_meta()]
+
+    def default_sample_bytes(self) -> float:
+        # raw uint8 image + int label (the seed profiler's default)
+        return float(np.prod(self.model.input_shape)) + 4.0
+
+    def init(self, key: jax.Array) -> Params:
+        return self.model.init(key)
+
+    def apply_segment(self, params: Params, x: jax.Array, start: int,
+                      stop: int) -> jax.Array:
+        return self.model.apply_segment(params, x, start, stop)
+
+    def sum_loss(self, logits: jax.Array, labels: jax.Array) -> jax.Array:
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.sum(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+    def dummy_batch(self, key: jax.Array, batch: int
+                    ) -> Tuple[jax.Array, jax.Array]:
+        kx, ky = jax.random.split(key)
+        x = jax.random.normal(kx, (batch,) + self.model.input_shape,
+                              jnp.float32)
+        y = jax.random.randint(ky, (batch,), 0, self.model.num_classes)
+        return x, y
+
+
+def as_layerstack(model: Any) -> LayerStack:
+    """Coerce a model to the :class:`LayerStack` protocol.
+
+    Accepts an adapter as-is, wraps a bare :class:`LayeredModel` (so legacy
+    call sites keep working), and rejects anything else loudly.
+    """
+    if isinstance(model, LayerStack):
+        return model
+    if isinstance(model, LayeredModel):
+        return CnnLayerStack(model)
+    raise TypeError(
+        f"{type(model).__name__} does not implement the LayerStack "
+        f"protocol (and is not a LayeredModel); see repro/core/layerstack.py")

@@ -77,10 +77,10 @@ def _maxplus_period_3w(d: Dict[str, np.ndarray]) -> np.ndarray:
         f_o2 = np.maximum(f_o1, act_s) + d["f_o2"]
         f_o3 = np.maximum(f_o2, act_l) + d["f_o3"]
         b_o3 = f_o3 + d["b_o3"]
-        gact_l = b_o3 + d["act_l"]
+        gact_l = b_o3 + d["gact_l"]
         b_l = gact_l + d["b_l"]
         b_o2 = b_o3 + d["b_o2"]
-        gact_s = b_o2 + d["act_s"]
+        gact_s = b_o2 + d["gact_s"]
         b_s = gact_s + d["b_s"]
         b_o1 = b_o2 + d["b_o1"]
         wg_s_up = b_s + d["wg_s"]
@@ -122,9 +122,13 @@ def _period_parts(profile: HierProfile, net: Network, o_idx: np.ndarray,
     in_o, in_s, in_l = t_in(o_idx, bo), t_in(s_idx, bs), t_in(l_idx, bl)
     mo_s = profile.MO[np.maximum(ms, 1) - 1]
     mo_l = profile.MO[np.maximum(ml, 1) - 1]
+    mg_s = profile.MG[np.maximum(ms, 1) - 1]
+    mg_l = profile.MG[np.maximum(ml, 1) - 1]
     d = {
         "act_s": np.where((ms > 0) & (bs > 0), bs * mo_s / bw_os, 0.0),
         "act_l": np.where((ml > 0) & (bl > 0), bl * mo_l / bw_ol, 0.0),
+        "gact_s": np.where((ms > 0) & (bs > 0), bs * mg_s / bw_os, 0.0),
+        "gact_l": np.where((ml > 0) & (bl > 0), bl * mg_l / bw_ol, 0.0),
         "wg_s": np.where(bs > 0, MPc[ms] / bw_os, 0.0),   # one-way leg
         "wg_l": np.where(bl > 0, MPc[ml] / bw_ol, 0.0),
         "f_s": bs * F[s_idx, ms],
@@ -152,9 +156,9 @@ def _period_parts(profile: HierProfile, net: Network, o_idx: np.ndarray,
     np.add.at(link, (ar, oi, s_idx), in_s)
     np.add.at(link, (ar, oi, l_idx), in_l)
     np.add.at(link, (ar, s_idx, o_idx), d["act_s"] + d["wg_s"])
-    np.add.at(link, (ar, o_idx, s_idx), d["act_s"] + d["wg_s"])
+    np.add.at(link, (ar, o_idx, s_idx), d["gact_s"] + d["wg_s"])
     np.add.at(link, (ar, l_idx, o_idx), d["act_l"] + d["wg_l"])
-    np.add.at(link, (ar, o_idx, l_idx), d["act_l"] + d["wg_l"])
+    np.add.at(link, (ar, o_idx, l_idx), d["gact_l"] + d["wg_l"])
     return cpu, link, _maxplus_period_3w(d)
 
 
@@ -230,10 +234,10 @@ def _maxplus_period_multi(d: Dict[str, np.ndarray]) -> np.ndarray:
         f_o2 = np.maximum(f_o1, act_s.max(axis=1)) + d["f_o2"]
         f_o3 = np.maximum(f_o2, act_l) + d["f_o3"]
         b_o3 = f_o3 + d["b_o3"]
-        gact_l = b_o3 + d["act_l"]
+        gact_l = b_o3 + d["gact_l"]
         b_l = gact_l + d["b_l"]
         b_o2 = b_o3 + d["b_o2"]
-        gact_s = b_o2[:, None] + d["act_s"]
+        gact_s = b_o2[:, None] + d["gact_s"]
         b_s = gact_s + d["b_s"]
         b_o1 = b_o2 + d["b_o1"]
         wg_s_up = b_s + d["wg_s"]
@@ -254,8 +258,9 @@ def _period_parts_multi(profile: MultiProfile, net: StarNetwork,
                         b: np.ndarray
                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
                                    np.ndarray, np.ndarray]:
-    """Per-lane ``(cpu [K,W], link [K,W,W], in_de [K,M], in_ec [K],
-    recurrence [K])`` for the star topology."""
+    """Per-lane ``(cpu [K,W], link [K,W,W], in_de [K,M,2], in_ec [K],
+    recurrence [K])`` for the star topology (``in_de`` is the per-device
+    radio busy time per input class: ``->edge`` and ``->cloud``)."""
     N = profile.num_layers
     M = profile.num_devices
     p = profile.prefix()
@@ -274,6 +279,8 @@ def _period_parts_multi(profile: MultiProfile, net: StarNetwork,
     bw_ol = bwm[o_idx, l_idx]
     mo_s = profile.MO[np.maximum(ms, 1) - 1]
     mo_l = profile.MO[np.maximum(ml, 1) - 1]
+    mg_s = profile.MG[np.maximum(ms, 1) - 1]
+    mg_l = profile.MG[np.maximum(ml, 1) - 1]
     bs_sum = bs.sum(axis=1)
     B = bo + bs_sum + bl
     catch_f = (bs * (F[o2, msmax[:, None]] - F[o2, ms])).sum(axis=1)
@@ -281,6 +288,8 @@ def _period_parts_multi(profile: MultiProfile, net: StarNetwork,
     d = {
         "act_s": np.where((ms > 0) & (bs > 0), bs * mo_s / bw_os, 0.0),
         "act_l": np.where((ml > 0) & (bl > 0), bl * mo_l / bw_ol, 0.0),
+        "gact_s": np.where((ms > 0) & (bs > 0), bs * mg_s / bw_os, 0.0),
+        "gact_l": np.where((ml > 0) & (bl > 0), bl * mg_l / bw_ol, 0.0),
         "wg_s": np.where(bs > 0, MPc[ms] / bw_os, 0.0),   # one-way leg
         "wg_l": np.where(bl > 0, MPc[ml] / bw_ol, 0.0),
         "f_s": bs * F[s_idx, ms],
@@ -311,25 +320,28 @@ def _period_parts_multi(profile: MultiProfile, net: StarNetwork,
         np.add.at(link, (ar, s_idx[:, i], o_idx),
                   d["act_s"][:, i] + d["wg_s"][:, i])
         np.add.at(link, (ar, o_idx, s_idx[:, i]),
-                  d["act_s"][:, i] + d["wg_s"][:, i])
+                  d["gact_s"][:, i] + d["wg_s"][:, i])
     np.add.at(link, (ar, l_idx, o_idx), d["act_l"] + d["wg_l"])
-    np.add.at(link, (ar, o_idx, l_idx), d["act_l"] + d["wg_l"])
+    np.add.at(link, (ar, o_idx, l_idx), d["gact_l"] + d["wg_l"])
 
-    # TC input-class pipes: device j's input radio carries a ``b/M`` chunk
-    # of every edge- or cloud-resident task's sub-batch; cloud chunks then
-    # serialize on the shared input backhaul (upload order o, s_i..., l —
-    # matching the simulator's task-add order).
-    in_de = np.zeros((K, M))
+    # TC input-class pipes: device j's radio carries a ``b/M`` chunk of
+    # every edge- or cloud-resident task's sub-batch, one shaped class per
+    # (device, destination) pair — matching the simulator; cloud chunks
+    # then serialize on the shared input backhaul (upload order o,
+    # s_i..., l — matching the simulator's task-add order).
+    in_de = np.zeros((K, M, 2))        # [..., 0] ->edge, [..., 1] ->cloud
     in_ec = np.zeros(K)
 
     def ingest(w_idx: np.ndarray, bb: np.ndarray) -> None:
         chunk = np.where((w_idx < M) | (bb == 0), 0.0, bb * Q / M)
+        edge_c = np.where(w_idx == M, chunk, 0.0)
+        cloud_c = np.where(w_idx == M + 1, chunk, 0.0)
         for j in range(M):
-            in_de[:, j] += chunk / net.bw_de[j]
+            in_de[:, j, 0] += edge_c / net.bw_de[j]
+            in_de[:, j, 1] += cloud_c / net.bw_de[j]
         # all M relay chunks of a cloud-bound upload serialize on the
         # shared input backhaul
-        cloud = np.where(w_idx == M + 1, chunk, 0.0)
-        in_ec[:] += M * (cloud / net.bw_ec)
+        in_ec[:] += M * (cloud_c / net.bw_ec)
 
     ingest(o_idx, bo)
     for i in range(M):
@@ -349,7 +361,7 @@ def t_period_multi_batch(profile: MultiProfile, net: StarNetwork,
     cpu, link, in_de, in_ec, rec = _period_parts_multi(
         profile, net, o_idx, s_idx, l_idx, ms, ml, b)
     busy = np.maximum(np.maximum(cpu.max(axis=1), link.max(axis=(1, 2))),
-                      np.maximum(in_de.max(axis=1), in_ec))
+                      np.maximum(in_de.max(axis=(1, 2)), in_ec))
     return np.maximum(busy, rec)
 
 

@@ -1,11 +1,17 @@
 """HierTrain profiling stage (§III): produce ``HierProfile`` objects.
 
+Model-agnostic since the :class:`~repro.core.layerstack.LayerStack`
+refactor (DESIGN.md §8): every entry point takes *any* layer stack —
+a bare :class:`repro.models.cnn.LayeredModel` (coerced through the CNN
+adapter, bit-for-bit identical profiles) or an adapter such as the LM
+model-zoo stack (:mod:`repro.models.lm.layerstack`).
+
 Two profiling modes:
 
 * :func:`analytic_profile` — derive per-layer per-worker times from the
-  model's FLOP metadata and per-worker effective throughput.  Deterministic;
+  stack's FLOP metadata and per-worker effective throughput.  Deterministic;
   used by tests and the figure-reproduction benchmarks.
-* :func:`measure_profile` — *measure* per-layer forward/backward wall time of
+* :func:`measure_profile` — *measure* per-cut forward/backward wall time of
   the real JAX model on this host (jit + warm-up + repeat, mean of runs — the
   paper's run-time profiling), then scale to each worker by its relative
   speed.  Used by the profiling-stage benchmark.
@@ -14,14 +20,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Sequence
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cost_model import WORKERS, HierProfile, MultiProfile
-from repro.models.cnn import LayeredModel
+from repro.core.layerstack import LayerStack, as_layerstack
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,13 +66,30 @@ ALEXNET_TESTBED: Dict[str, WorkerSpec] = {
     "cloud": WorkerSpec("cloud", flops_per_sec=2e11, overhead=5e-6),
 }
 
+# Transformer blocks are MXU/NEON-friendly dense matmuls: phones and edge
+# boxes sustain a far larger fraction of peak than on branchy CNN stacks.
+# Calibrated for the LM-fleet benchmark: mobile NPU device tier (~0.2
+# effective bf16 TFLOP/s), edge GPU box (~1), cloud accelerator (~5).
+LM_TESTBED: Dict[str, WorkerSpec] = {
+    "device": WorkerSpec("device", flops_per_sec=2e11, overhead=2e-4),
+    "edge": WorkerSpec("edge", flops_per_sec=1e12, overhead=5e-5),
+    "cloud": WorkerSpec("cloud", flops_per_sec=5e12, overhead=2e-5),
+}
 
-def analytic_profile(model: LayeredModel,
-                     workers: Dict[str, WorkerSpec] | None = None,
+
+def analytic_profile(model, workers: Dict[str, WorkerSpec] | None = None,
                      sample_bytes: float | None = None,
                      bwd_fwd_ratio: float = 2.0) -> HierProfile:
+    """Analytic profile of any :class:`LayerStack` (or ``LayeredModel``).
+
+    Cut-points that expose an explicit ``flops_bwd`` use it; the rest fall
+    back to ``bwd_fwd_ratio * flops_fwd`` evaluated in the seed's exact
+    operation order, so CNN profiles stay bitwise identical.  ``MG`` comes
+    from the cut-points' ``grad_bytes`` (``== act_bytes`` by default).
+    """
+    stack = as_layerstack(model)
     workers = workers or PAPER_TESTBED
-    metas = model.layer_meta()
+    metas = stack.cut_meta()
     n = len(metas)
     L_f = np.zeros((3, n))
     L_b = np.zeros((3, n))
@@ -75,25 +98,27 @@ def analytic_profile(model: LayeredModel,
         w = workers[wname]
         for i, m in enumerate(metas):
             L_f[j, i] = m.flops_fwd / w.flops_per_sec + w.overhead
-            L_b[j, i] = bwd_fwd_ratio * m.flops_fwd / w.flops_per_sec \
-                + w.overhead
+            if m.flops_bwd is None:
+                L_b[j, i] = bwd_fwd_ratio * m.flops_fwd / w.flops_per_sec \
+                    + w.overhead
+            else:
+                L_b[j, i] = m.flops_bwd / w.flops_per_sec + w.overhead
             L_u[j, i] = m.param_count * w.update_flops_per_param / \
                 w.flops_per_sec + w.overhead
     if sample_bytes is None:
-        # raw uint8 image + int label
-        sample_bytes = float(np.prod(model.input_shape)) + 4.0
+        sample_bytes = stack.default_sample_bytes()
+    cols = stack.meta_arrays()
     return HierProfile(
-        layer_names=tuple(m.name for m in metas),
+        layer_names=cols["names"],
         L_f=L_f, L_b=L_b, L_u=L_u,
-        MP=np.array([m.param_bytes for m in metas], np.float64),
-        MO=np.array([m.out_bytes for m in metas], np.float64),
+        MP=cols["MP"], MO=cols["MO"], MG=cols["MG"],
         sample_bytes=sample_bytes,
     )
 
 
-def multi_analytic_profile(model: LayeredModel,
+def multi_analytic_profile(model,
                            workers: Dict[str, WorkerSpec] | None = None,
-                           device_slowdowns: Sequence[float] = (1.0,),
+                           device_slowdowns=(1.0,),
                            sample_bytes: float | None = None,
                            bwd_fwd_ratio: float = 2.0) -> MultiProfile:
     """Analytic profile for the M-device star (DESIGN.md §6).
@@ -109,30 +134,37 @@ def multi_analytic_profile(model: LayeredModel,
         device_slowdowns)
 
 
-def measure_profile(model: LayeredModel,
-                    rel_speed: Dict[str, float] | None = None,
+def measure_profile(model, rel_speed: Dict[str, float] | None = None,
                     batch: int = 8, repeats: int = 3,
                     sample_bytes: float | None = None) -> HierProfile:
-    """Measure real per-layer fwd/bwd times on this host, scale per worker.
+    """Measure real per-cut fwd/bwd times on this host, scale per worker.
 
     ``rel_speed[worker]`` divides the measured host time (2.0 => 2x faster
     than this host).  Default calibrates this CPU as the "edge" tier.
     """
+    stack = as_layerstack(model)
     rel_speed = rel_speed or {"device": 1 / 13.0, "edge": 1.0, "cloud": 11.0}
-    metas = model.layer_meta()
+    metas = stack.cut_meta()
     key = jax.random.PRNGKey(0)
-    params = model.init(key)
-    n = model.num_layers
+    params = stack.init(key)
+    n = stack.num_layers
     host_f = np.zeros(n)
     host_b = np.zeros(n)
-    shape = (batch,) + model.input_shape
-    x = jax.random.normal(key, shape, jnp.float32)
+    x, _ = stack.dummy_batch(key, batch)
     for i in range(n):
-        xi = x if i == 0 else _layer_input(model, params, x, i)
-        fwd = jax.jit(lambda p, v, i=i: model.apply_layer(p, v, i))
-        vjp = jax.jit(lambda p, v, i=i: jax.vjp(
-            lambda pp, vv: jnp.sum(model.apply_layer(pp, vv, i) ** 2),
-            p, v)[1](1.0))
+        xi = x if i == 0 else _segment_input(stack, params, x, i)
+        fwd = jax.jit(lambda p, v, i=i: _seg_apply(stack, params, p, v, i))
+        # Backward timing covers what a mid-stack worker computes: the
+        # cotangent w.r.t. this cut's params AND its input activations.
+        # Integer segment inputs (the LM embed cut's token ids) have no
+        # tangent, so there the params cotangent is the whole backward.
+        if jnp.issubdtype(xi.dtype, jnp.floating):
+            vjp = jax.jit(lambda p, v, i=i: jax.vjp(
+                lambda pp, vv: _seg_sq(stack, params, pp, vv, i),
+                p, v)[1](1.0))
+        else:
+            vjp = jax.jit(lambda p, v, i=i: jax.vjp(
+                lambda pp: _seg_sq(stack, params, pp, v, i), p)[1](1.0))
         fwd(params[i], xi).block_until_ready()  # compile
         jax.block_until_ready(vjp(params[i], xi))
         tf, tb = [], []
@@ -155,16 +187,32 @@ def measure_profile(model: LayeredModel,
         L_u[j] = np.array([m.param_count * 4.0 for m in metas]) / \
             (s * 8e9)  # SGD update flops over scaled host throughput
     if sample_bytes is None:
-        sample_bytes = float(np.prod(model.input_shape)) + 4.0
+        sample_bytes = stack.default_sample_bytes()
+    cols = stack.meta_arrays()
     return HierProfile(
-        layer_names=tuple(m.name for m in metas),
+        layer_names=cols["names"],
         L_f=L_f, L_b=L_b, L_u=L_u,
-        MP=np.array([m.param_bytes for m in metas], np.float64),
-        MO=np.array([m.out_bytes for m in metas], np.float64),
+        MP=cols["MP"], MO=cols["MO"], MG=cols["MG"],
         sample_bytes=sample_bytes,
     )
 
 
-def _layer_input(model: LayeredModel, params: Sequence, x: jax.Array,
-                 i: int) -> jax.Array:
-    return jax.jit(lambda p, v: model.apply_segment(p, v, 0, i))(params, x)
+def _seg_apply(stack: LayerStack, params, p_i, x: jax.Array,
+               i: int) -> jax.Array:
+    """Run cut ``i`` with slot ``i`` of ``params`` swapped for ``p_i`` —
+    the segment touches only that slot, so tracing differentiates (and
+    transfers) nothing else."""
+    ps = list(params)
+    ps[i] = p_i
+    return stack.apply_segment(ps, x, i, i + 1)
+
+
+def _seg_sq(stack: LayerStack, params, p_i, x: jax.Array,
+            i: int) -> jax.Array:
+    y = _seg_apply(stack, params, p_i, x, i)
+    return (y.astype(np.float32) ** 2).sum()
+
+
+def _segment_input(stack: LayerStack, params, x: jax.Array,
+                   i: int) -> jax.Array:
+    return jax.jit(lambda p, v: stack.apply_segment(p, v, 0, i))(params, x)

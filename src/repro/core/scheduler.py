@@ -162,6 +162,8 @@ def _solve_cut_lp(profile: HierProfile, net: Network, wo: str, ws: str,
     in_l = 0.0 if wl == origin else Q / net.bw(origin, wl)
     mo_s = profile.MO[m_s - 1] / bw_os if m_s > 0 else 0.0
     mo_l = profile.MO[m_l - 1] / bw_ol if m_l > 0 else 0.0
+    mg_s = profile.MG[m_s - 1] / bw_os if m_s > 0 else 0.0
+    mg_l = profile.MG[m_l - 1] / bw_ol if m_l > 0 else 0.0
 
     nv = _LP_NUM_VARS
     A_ub, b_ub = [], []
@@ -173,18 +175,19 @@ def _solve_cut_lp(profile: HierProfile, net: Network, wo: str, ws: str,
         A_ub.append(row)
         b_ub.append(0.0)
 
-    # t1 >= each arm of Eq. (5); t2 >= each arm of Eq. (6).
+    # t1 >= each arm of Eq. (5); t2 >= each arm of Eq. (6) (backward arms
+    # ship the activation *gradient*: MG-based wire terms).
     ub([in_o + F[o, m_s], 0, 0], 0)
     ub([0, in_s + F[s, m_s] + mo_s, 0], 0)
     ub([0, 0, in_l + F[l, m_s]], 0)
     ub([Bk[o, m_s], 0, 0], 1)
-    ub([0, Bk[s, m_s] + mo_s, 0], 1)
+    ub([0, Bk[s, m_s] + mg_s, 0], 1)
     ub([0, 0, Bk[l, m_s]], 1)
     # t3 >= each arm of Eq. (7); t4 >= each arm of Eq. (8).
     ub([F[o, m_l] - F[o, m_s], F[o, m_l] - F[o, m_s], 0], 2)
     ub([0, 0, (F[l, m_l] - F[l, m_s]) + mo_l], 2)
     ub([Bk[o, m_l] - Bk[o, m_s], Bk[o, m_l] - Bk[o, m_s], 0], 3)
-    ub([0, 0, (Bk[l, m_l] - Bk[l, m_s]) + mo_l], 3)
+    ub([0, 0, (Bk[l, m_l] - Bk[l, m_s]) + mg_l], 3)
     # Constraints (14)/(15): b_s <= m_s*B, b_l <= m_l*B.
     row = np.zeros(nv); row[1] = 1.0
     A_ub.append(row); b_ub.append(float(m_s) * B)
@@ -284,15 +287,18 @@ def _build_lp_stack(profile: HierProfile, net: Network, o_idx: np.ndarray,
     in_l = np.where(l_idx == oi, 0.0, Q / bwm[oi, l_idx])
     mo_s = np.where(ms > 0, profile.MO[np.maximum(ms, 1) - 1] / bw_os, 0.0)
     mo_l = np.where(ml > 0, profile.MO[np.maximum(ml, 1) - 1] / bw_ol, 0.0)
+    mg_s = np.where(ms > 0, profile.MG[np.maximum(ms, 1) - 1] / bw_os, 0.0)
+    mg_l = np.where(ml > 0, profile.MG[np.maximum(ml, 1) - 1] / bw_ol, 0.0)
 
     A_ub = np.zeros((K, _LP_NUM_UB, _LP_NUM_VARS))
     b_ub = np.zeros((K, _LP_NUM_UB))
-    # t1 >= each arm of Eq. (5); t2 >= each arm of Eq. (6).
+    # t1 >= each arm of Eq. (5); t2 >= each arm of Eq. (6) (backward arms
+    # use the MG-based gradient wire terms).
     A_ub[:, 0, 0] = in_o + F[o_idx, ms]
     A_ub[:, 1, 1] = in_s + F[s_idx, ms] + mo_s
     A_ub[:, 2, 2] = in_l + F[l_idx, ms]
     A_ub[:, 3, 0] = Bk[o_idx, ms]
-    A_ub[:, 4, 1] = Bk[s_idx, ms] + mo_s
+    A_ub[:, 4, 1] = Bk[s_idx, ms] + mg_s
     A_ub[:, 5, 2] = Bk[l_idx, ms]
     A_ub[:, :3, 3] = -1.0
     A_ub[:, 3:6, 4] = -1.0
@@ -304,7 +310,7 @@ def _build_lp_stack(profile: HierProfile, net: Network, o_idx: np.ndarray,
     A_ub[:, 7, 2] = (F[l_idx, ml] - F[l_idx, ms]) + mo_l
     A_ub[:, 8, 0] = dBk_o
     A_ub[:, 8, 1] = dBk_o
-    A_ub[:, 9, 2] = (Bk[l_idx, ml] - Bk[l_idx, ms]) + mo_l
+    A_ub[:, 9, 2] = (Bk[l_idx, ml] - Bk[l_idx, ms]) + mg_l
     A_ub[:, 6:8, 5] = -1.0
     A_ub[:, 8:10, 6] = -1.0
     # Constraints (14)/(15): b_s <= m_s*B, b_l <= m_l*B.
@@ -509,10 +515,13 @@ def _build_multi_lp_stack(profile: MultiProfile, net: StarNetwork,
     in_l = np.where(l_idx < M, 0.0, Q / up[l_idx])
     mo_s = np.where(ms > 0, profile.MO[np.maximum(ms, 1) - 1] / bw_os, 0.0)
     mo_l = np.where(ml > 0, profile.MO[np.maximum(ml, 1) - 1] / bw_ol, 0.0)
+    mg_s = np.where(ms > 0, profile.MG[np.maximum(ms, 1) - 1] / bw_os, 0.0)
+    mg_l = np.where(ml > 0, profile.MG[np.maximum(ml, 1) - 1] / bw_ol, 0.0)
 
     A_ub = np.zeros((K, 3 * M + 9, nv))
     b_ub = np.zeros((K, 3 * M + 9))
-    # t1 >= each phase-1 forward arm; t2 >= each phase-1 backward arm.
+    # t1 >= each phase-1 forward arm; t2 >= each phase-1 backward arm
+    # (backward arms use the MG-based gradient wire terms).
     A_ub[:, 0, 0] = in_o + F[o_idx, msmax]
     for i in range(M):
         A_ub[:, 1 + i, 1 + i] = in_s[:, i] + F[s_idx[:, i], ms[:, i]] + \
@@ -520,7 +529,7 @@ def _build_multi_lp_stack(profile: MultiProfile, net: StarNetwork,
     A_ub[:, M + 1, M + 1] = in_l + F[l_idx, msmax]
     A_ub[:, M + 2, 0] = Bk[o_idx, msmax]
     for i in range(M):
-        A_ub[:, M + 3 + i, 1 + i] = Bk[s_idx[:, i], ms[:, i]] + mo_s[:, i]
+        A_ub[:, M + 3 + i, 1 + i] = Bk[s_idx[:, i], ms[:, i]] + mg_s[:, i]
     A_ub[:, 2 * M + 3, M + 1] = Bk[l_idx, msmax]
     A_ub[:, :M + 2, t1] = -1.0
     A_ub[:, M + 2:2 * M + 4, t2] = -1.0
@@ -536,7 +545,7 @@ def _build_multi_lp_stack(profile: MultiProfile, net: StarNetwork,
         A_ub[:, 2 * M + 6, 1 + i] = dBk_o + (Bk[o_idx, msmax] -
                                              Bk[o_idx, ms[:, i]])
     A_ub[:, 2 * M + 5, M + 1] = (F[l_idx, ml] - F[l_idx, msmax]) + mo_l
-    A_ub[:, 2 * M + 7, M + 1] = (Bk[l_idx, ml] - Bk[l_idx, msmax]) + mo_l
+    A_ub[:, 2 * M + 7, M + 1] = (Bk[l_idx, ml] - Bk[l_idx, msmax]) + mg_l
     A_ub[:, 2 * M + 4:2 * M + 6, t3] = -1.0
     A_ub[:, 2 * M + 6:2 * M + 8, t4] = -1.0
     # Constraints (14)/(15): b_s[i] <= m_s[i]*B, b_l <= m_l*B.

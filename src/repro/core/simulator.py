@@ -181,12 +181,12 @@ def _add_iteration(des: Des, profile: HierProfile, net: Network,
     # --- backward ---------------------------------------------------------
     compute(nm("b_o3"), wo, (bo + bs + bl) * (Bk[o, N] - Bk[o, ml]),
             [nm("f_o3")])
-    xfer(nm("gact_l"), wo, wl, bl * profile.MO[ml - 1] if ml > 0 and bl > 0
+    xfer(nm("gact_l"), wo, wl, bl * profile.MG[ml - 1] if ml > 0 and bl > 0
          else 0.0, [nm("b_o3")])
     compute(nm("b_l"), wl, bl * Bk[l, ml], [nm("gact_l")])
     compute(nm("b_o2"), wo, (bo + bs) * (Bk[o, ml] - Bk[o, ms]),
             [nm("b_o3")])
-    xfer(nm("gact_s"), wo, ws, bs * profile.MO[ms - 1] if ms > 0 and bs > 0
+    xfer(nm("gact_s"), wo, ws, bs * profile.MG[ms - 1] if ms > 0 and bs > 0
          else 0.0, [nm("b_o2")])
     compute(nm("b_s"), ws, bs * Bk[s, ms], [nm("gact_s")])
     compute(nm("b_o1"), wo, bo * Bk[o, ms], [nm("b_o2")])
@@ -291,7 +291,11 @@ def _add_iteration_multi(des: Des, profile: MultiProfile, net: StarNetwork,
         for j in range(M):
             name = f"{nm(base)}_{j}"
             if w == M + 1:               # device_j -> edge -> cloud relay
-                des.add(name, (f"link:in:{names[j]}->edge",
+                # the radio hop is the (device, cloud) input class — its
+                # own TC pipe, NOT shared with the (device, edge) class
+                # (LM-fleet ingest is MBs per sample; sharing the first
+                # hop diverged from upload_bw by ~50% there)
+                des.add(name, (f"link:in:{names[j]}->{names[w]}",
                                "link:in:edge->cloud"),
                         (chunk / net.bw_de[j], chunk / net.bw_ec), ())
             else:
@@ -332,7 +336,7 @@ def _add_iteration_multi(des: Des, profile: MultiProfile, net: StarNetwork,
     # --- backward ---------------------------------------------------------
     compute(nm("b_o3"), o, (bo + bs_sum + bl) * (Bk[o, N] - Bk[o, ml]),
             [nm("f_o3")])
-    xfer(nm("gact_l"), o, l, bl * profile.MO[ml - 1] if ml > 0 and bl > 0
+    xfer(nm("gact_l"), o, l, bl * profile.MG[ml - 1] if ml > 0 and bl > 0
          else 0.0, [nm("b_o3")])
     compute(nm("b_l"), l, bl * Bk[l, ml], [nm("gact_l")])
     compute(nm("b_o2"), o,
@@ -340,7 +344,7 @@ def _add_iteration_multi(des: Des, profile: MultiProfile, net: StarNetwork,
             [nm("b_o3")])
     for i, si in enumerate(s):
         xfer(nm(f"gact_s{i}"), o, si,
-             bs[i] * profile.MO[sched.m_s[i] - 1]
+             bs[i] * profile.MG[sched.m_s[i] - 1]
              if sched.m_s[i] > 0 and bs[i] > 0 else 0.0, [nm("b_o2")])
         compute(nm(f"b_s{i}"), si, bs[i] * Bk[si, sched.m_s[i]],
                 [nm(f"gact_s{i}")])

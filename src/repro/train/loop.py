@@ -128,8 +128,13 @@ def run_hier_loop(cfg: HierLoopConfig, model, profile, net, data,
                   worker_slowdown: Optional[Callable[[int], Dict[str, float]]]
                   = None, log: Optional[Callable[[str], None]] = None
                   ) -> Dict[str, Any]:
-    """Train a layered CNN under the HierTrain schedule, re-solving the
+    """Train any layer stack under the HierTrain schedule, re-solving the
     schedule online as (simulated) worker speeds drift.
+
+    ``model`` is anything :func:`repro.core.layerstack.as_layerstack`
+    accepts — a layered CNN or an LM model-zoo adapter
+    (:mod:`repro.models.lm.layerstack`); ``data.batch(step)`` must return
+    ``{"x", "labels"}`` arrays whose leading axis is the sample axis.
 
     ``worker_slowdown(step)`` returns per-worker slowdown factors —
     the straggler injection used by tests/benchmarks.  Execution is
@@ -212,6 +217,7 @@ def run_multi_hier_loop(cfg: HierLoopConfig, model, profile, net, data,
                         ) -> Dict[str, Any]:
     """M-device variant of :func:`run_hier_loop` (DESIGN.md §6).
 
+    ``model`` is any layer stack as in :func:`run_hier_loop`;
     ``profile`` is a :class:`repro.core.cost_model.MultiProfile` and ``net``
     a :class:`~repro.core.cost_model.StarNetwork`; ``worker_slowdown(step)``
     maps *worker names* (``device_0``..., ``edge``, ``cloud``) to slowdown
