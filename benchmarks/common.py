@@ -10,30 +10,42 @@ import subprocess
 import time
 from typing import Dict, Iterable, List, Sequence
 
-import numpy as np
-
 from repro.core.cost_model import HierProfile, MultiProfile, Network, \
     StarNetwork
-from repro.core.profiler import (ALEXNET_TESTBED, PAPER_TESTBED,
-                                 analytic_profile)
+from repro.core.fleet import (FLEET_SLOWDOWNS, FLEET_UPLINK_MBPS, MBPS,
+                              MOBILE_EDGE_MBPS, TABLE2_TESTBEDS, Fleet)
 from repro.models.cnn import alexnet, lenet5
-
-MBPS = 1e6 / 8.0                      # paper quotes Mbps; model uses B/s
 
 # §VI-D: mobile-edge fixed at 5 Mbps; edge-cloud swept 1.5 -> 5 Mbps.
 EDGE_CLOUD_SWEEP_MBPS = (1.5, 2.0, 2.5, 3.0, 3.5, 4.0, 4.5, 5.0)
-MOBILE_EDGE_MBPS = 5.0
 
 BATCH = {"lenet5": 128, "alexnet": 64}
 
-# Per-model worker calibration — the paper's profiling stage measures each
-# model on each worker, so effective throughput is model-specific.
-TESTBEDS = {"lenet5": PAPER_TESTBED, "alexnet": ALEXNET_TESTBED}
+# Per-model worker calibration — single-sourced from repro.core.fleet so
+# benchmarks and the Fleet constructors can never drift apart.
+TESTBEDS = TABLE2_TESTBEDS
+
+_MODELS = {"lenet5": lenet5, "alexnet": alexnet}
+
+
+def cnn_model(model_name: str):
+    return _MODELS[model_name]()
+
+
+def table2_fleet(model_name: str, edge_cloud_mbps: float, m: int = 1,
+                 topology: str = "auto") -> Fleet:
+    """The paper-calibrated testbed as a :class:`Fleet` (the benchmark
+    front door; figures plan through ``repro.api`` against it)."""
+    return Fleet.from_table2(model=model_name, m=m,
+                             edge_cloud_mbps=edge_cloud_mbps,
+                             topology=topology)
 
 
 def paper_profile(model_name: str) -> HierProfile:
-    model = {"lenet5": lenet5, "alexnet": alexnet}[model_name]()
-    return analytic_profile(model, TESTBEDS[model_name])
+    """The 3-worker analytic profile of the paper's testbed (kept for
+    the equivalence suites; figures use :func:`table2_fleet`)."""
+    fleet = table2_fleet(model_name, 3.0, topology="triple")
+    return fleet.profile_for(cnn_model(model_name))
 
 
 def network(edge_cloud_mbps: float,
@@ -42,25 +54,17 @@ def network(edge_cloud_mbps: float,
                    bw_ec=edge_cloud_mbps * MBPS)
 
 
-# Heterogeneous device fleet for the M-device sweep: per-device compute
-# slowdown vs the paper's reference device, and per-device uplink Mbps.
-# Deterministic so BENCH records stay comparable across PRs; the first
-# device is the paper's testbed device exactly (slowdown 1.0, 5 Mbps).
-FLEET_SLOWDOWNS = (1.0, 1.4, 1.9, 2.5, 1.2, 1.6, 2.2, 3.0)
-FLEET_UPLINK_MBPS = (5.0, 4.5, 4.0, 3.5, 5.0, 4.2, 3.8, 3.2)
-
-
 def fleet_profile(model_name: str, m: int) -> MultiProfile:
     """M-device star profile for the paper-calibrated model testbed."""
-    assert 1 <= m <= len(FLEET_SLOWDOWNS)
-    return MultiProfile.from_hier(paper_profile(model_name),
-                                  FLEET_SLOWDOWNS[:m])
+    fleet = table2_fleet(model_name, 3.0, m=m, topology="star")
+    return fleet.profile_for(cnn_model(model_name))
 
 
 def star_network(m: int, edge_cloud_mbps: float) -> StarNetwork:
-    assert 1 <= m <= len(FLEET_UPLINK_MBPS)
-    return StarNetwork(bw_de=np.array(FLEET_UPLINK_MBPS[:m]) * MBPS,
-                       bw_ec=edge_cloud_mbps * MBPS)
+    net = table2_fleet("lenet5", edge_cloud_mbps, m=m,
+                       topology="star").network()
+    assert isinstance(net, StarNetwork)
+    return net
 
 
 def git_sha() -> str:

@@ -2,14 +2,15 @@
 The paper scales the edge server from 1 to 4 cores (docker-limited);
 here the edge worker's throughput scales with core count.  Expected
 shape: big win 1->2 cores at low bandwidth, flat at high bandwidth
-(optimal policy trains on the cloud)."""
+(optimal policy trains on the cloud).  A custom-spec ``Fleet`` per core
+count, planned through ``repro.api``."""
 from __future__ import annotations
 
 import dataclasses
 
-from benchmarks.common import BATCH, network, table
-from repro.core.profiler import ALEXNET_TESTBED, analytic_profile
-from repro.core.scheduler import solve
+from benchmarks.common import BATCH, table
+from repro.api import Fleet, plan
+from repro.core.profiler import ALEXNET_TESTBED
 from repro.models.cnn import alexnet
 
 BWS = (1.0, 1.5, 2.0, 3.0, 4.0)
@@ -23,11 +24,11 @@ def run() -> str:
         base = workers["edge"]
         workers["edge"] = dataclasses.replace(
             base, flops_per_sec=base.flops_per_sec * cores)
-        profile = analytic_profile(model, workers)
         row = {"edge_cores": cores}
         for bw in BWS:
-            row[f"bw{bw}"] = solve(profile, network(bw),
-                                   BATCH["alexnet"]).t_total
+            fleet = Fleet(workers=workers, backhaul_mbps=bw,
+                          topology="triple")
+            row[f"bw{bw}"] = plan(model, fleet, BATCH["alexnet"]).t_total
         rows.append(row)
     return table(rows, ["edge_cores"] + [f"bw{b}" for b in BWS],
                  "Fig.11 — per-iteration time (s) vs edge cores, AlexNet")

@@ -1,30 +1,30 @@
 """Fig. 6: cost-model validity — Eq. (12) analytic latency vs the
 discrete-event simulation of the §IV-B procedure, per phase, training
-AlexNet under the optimal schedule at several bandwidths."""
+AlexNet under the optimal schedule at several bandwidths.  Planned
+through the ``repro.api`` front door (triple-native fleet: the paper's
+exact 3-worker stack)."""
 from __future__ import annotations
 
-from benchmarks.common import (EDGE_CLOUD_SWEEP_MBPS, network,
-                               paper_profile, table)
-from repro.core.cost_model import t_total
-from repro.core.scheduler import solve
-from repro.core.simulator import simulate_iteration
+from benchmarks.common import (EDGE_CLOUD_SWEEP_MBPS, cnn_model, table,
+                               table2_fleet)
+from repro.api import plan
 
 
 def run() -> str:
-    profile = paper_profile("alexnet")
+    model = cnn_model("alexnet")
     rows = []
     for bw in EDGE_CLOUD_SWEEP_MBPS:
-        net = network(bw)
-        res = solve(profile, net, B=64)
-        analytic = t_total(profile, net, res.schedule).total
-        simulated = simulate_iteration(profile, net, res.schedule)
+        p = plan(model, table2_fleet("alexnet", bw, topology="triple"),
+                 B=64)
+        analytic = p.t_total
+        simulated = p.simulate()
         rows.append({
             "edge_cloud_mbps": bw,
             "analytic_s": analytic,
             "simulated_s": simulated,
             "rel_err_%": 100.0 * abs(simulated - analytic) /
             max(analytic, 1e-12),
-            "schedule": res.schedule.describe(),
+            "schedule": p.schedule.describe(),
         })
     return table(rows, ["edge_cloud_mbps", "analytic_s", "simulated_s",
                         "rel_err_%", "schedule"],

@@ -1,25 +1,25 @@
 """Figs. 7/8: per-iteration training time of HierTrain vs All-Edge and
 All-Cloud across the edge-cloud bandwidth sweep, for AlexNet (Fig. 7)
 and LeNet-5 (Fig. 8).  The paper reports up to 2.3x/4.5x (AlexNet) and
-1.7x/6.9x (LeNet-5) speedups over All-Edge/All-Cloud."""
+1.7x/6.9x (LeNet-5) speedups over All-Edge/All-Cloud.  Planned through
+``repro.api``; the baselines come from ``Plan.baseline``."""
 from __future__ import annotations
 
-from benchmarks.common import (BATCH, EDGE_CLOUD_SWEEP_MBPS, network,
-                               paper_profile, table)
-from repro.core.baselines import all_on_one
-from repro.core.scheduler import solve
+from benchmarks.common import BATCH, EDGE_CLOUD_SWEEP_MBPS, cnn_model, \
+    table, table2_fleet
+from repro.api import plan
 
 
 def run_model(model_name: str) -> tuple:
-    profile = paper_profile(model_name)
+    model = cnn_model(model_name)
     B = BATCH[model_name]
     rows = []
     best_edge, best_cloud = 0.0, 0.0
     for bw in EDGE_CLOUD_SWEEP_MBPS:
-        net = network(bw)
-        hier = solve(profile, net, B).t_total
-        edge = all_on_one(profile, net, B, "edge").t_total
-        cloud = all_on_one(profile, net, B, "cloud").t_total
+        p = plan(model, table2_fleet(model_name, bw, topology="triple"), B)
+        hier = p.t_total
+        edge = p.baseline("edge")
+        cloud = p.baseline("cloud")
         best_edge = max(best_edge, edge / hier)
         best_cloud = max(best_cloud, cloud / hier)
         rows.append({"edge_cloud_mbps": bw, "hiertrain_s": hier,

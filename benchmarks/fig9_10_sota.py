@@ -3,27 +3,31 @@ compression) across the bandwidth sweep, AlexNet and LeNet-5.
 
 Expected qualitative shape (paper §VI-D.3): JALAD wins below ~2 Mbps on
 AlexNet (compression dominates), HierTrain wins everywhere else; on
-LeNet-5 the JALAD/JointDNN+ curves collapse onto All-Edge/All-Cloud."""
+LeNet-5 the JALAD/JointDNN+ curves collapse onto All-Edge/All-Cloud.
+
+HierTrain plans through ``repro.api``; the SOTA baselines keep their own
+shortest-path schedulers (:mod:`repro.core.baselines`) evaluated on the
+plan's profile/network."""
 from __future__ import annotations
 
-from benchmarks.common import (BATCH, EDGE_CLOUD_SWEEP_MBPS, network,
-                               paper_profile, table)
+from benchmarks.common import BATCH, EDGE_CLOUD_SWEEP_MBPS, cnn_model, \
+    table, table2_fleet
+from repro.api import plan
 from repro.core.baselines import jalad, jointdnn, jointdnn_plus
-from repro.core.scheduler import solve
 
 
 def run_model(model_name: str) -> list:
-    profile = paper_profile(model_name)
+    model = cnn_model(model_name)
     B = BATCH[model_name]
     rows = []
     for bw in EDGE_CLOUD_SWEEP_MBPS:
-        net = network(bw)
+        p = plan(model, table2_fleet(model_name, bw, topology="triple"), B)
         rows.append({
             "edge_cloud_mbps": bw,
-            "hiertrain_s": solve(profile, net, B).t_total,
-            "jointdnn_s": jointdnn(profile, net, B).t_total,
-            "jointdnn+_s": jointdnn_plus(profile, net, B).t_total,
-            "jalad_s": jalad(profile, net, B).t_total,
+            "hiertrain_s": p.t_total,
+            "jointdnn_s": jointdnn(p.profile, p.network, B).t_total,
+            "jointdnn+_s": jointdnn_plus(p.profile, p.network, B).t_total,
+            "jalad_s": jalad(p.profile, p.network, B).t_total,
         })
     return rows
 

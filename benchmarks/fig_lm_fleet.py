@@ -4,10 +4,11 @@ Schedules small-but-shaped-like-the-real-thing LM block stacks (four
 families: attention, gla/mamba2, moe, xlstm) across the M-device
 mobile-edge-cloud fleet via the LayerStack adapter
 (:mod:`repro.models.lm.layerstack`), for M in {1, 2, 4}, under both the
-latency and the throughput objective.  Everything here is the *analytic*
-path — cut-point meta, Algorithm-1 LPs, closed-form periods, DES
-validation — so it is deterministic and tracked by the BENCH_sched.json
-drift check.
+latency and the throughput objective — one ``repro.api.plan`` call per
+(family, M, objective) against ``Fleet.lm_default``.  Everything here is
+the *analytic* path — cut-point meta, Algorithm-1 LPs, closed-form
+periods, DES validation — so it is deterministic and tracked by the
+BENCH_sched.json drift check.
 
 Activations are bf16 on the wire but gradients return in f32
 (``grad_bytes = 2 * act_bytes``): this is the first committed artifact to
@@ -28,13 +29,9 @@ from __future__ import annotations
 from typing import Dict, List
 
 import jax.numpy as jnp
-import numpy as np
 
-from benchmarks.common import MBPS, table
-from repro.core.cost_model import MultiSchedule, StarNetwork, t_total_multi
-from repro.core.profiler import LM_TESTBED, multi_analytic_profile
-from repro.core.scheduler import solve_multi
-from repro.core.simulator import simulate_iteration_multi
+from benchmarks.common import table
+from repro.api import Fleet, plan
 from repro.models.lm.layerstack import lm_layerstack
 from repro.models.lm.model import LMConfig
 from repro.models.lm.moe import MoEConfig
@@ -44,13 +41,6 @@ from repro.models.lm.xlstm import XLSTMConfig
 SEQ_LEN = 512
 BATCH = 64
 M_SWEEP = (1, 2, 4)
-RAW_SAMPLE_BYTES = 2e6       # on-device raw payload per sequence
-
-# Same deterministic heterogeneity shape as the CNN fleet
-# (benchmarks/common.py), on LTE/WiFi-class radios (raw payloads are MBs).
-LM_FLEET_SLOWDOWNS = (1.0, 1.4, 1.9, 2.5)
-LM_FLEET_UPLINK_MBPS = (50.0, 40.0, 30.0, 25.0)
-LM_BACKHAUL_MBPS = 200.0
 
 # ~120M-parameter-class stacks: big enough that cuts are non-trivial,
 # small enough that the exhaustive stage-A sweep stays sub-second.
@@ -74,55 +64,30 @@ CONFIGS: Dict[str, LMConfig] = {
 }
 
 
-def lm_star_network(m: int) -> StarNetwork:
-    assert 1 <= m <= len(LM_FLEET_UPLINK_MBPS)
-    return StarNetwork(
-        bw_de=np.array(LM_FLEET_UPLINK_MBPS[:m]) * MBPS,
-        bw_ec=LM_BACKHAUL_MBPS * MBPS)
-
-
-def _single_worker(prof, tier: str) -> MultiSchedule:
-    """All-on-one-worker baseline schedule (everything on ``tier``)."""
-    m = prof.num_devices
-    names = list(prof.worker_names)
-    wo = tier if tier != "device" else names[0]
-    rest = [w for w in names if w != wo]
-    wl = rest[-1]
-    return MultiSchedule(worker_o=wo, worker_l=wl,
-                         s_workers=tuple(rest[:-1]), m_s=(0,) * m, m_l=0,
-                         b_o=BATCH, b_s=(0,) * m, b_l=0)
-
-
 def _rows() -> List[Dict]:
     rows: List[Dict] = []
     for family, cfg in CONFIGS.items():
         stack = lm_layerstack(cfg, seq_len=SEQ_LEN)
         assert cfg.dtype == jnp.bfloat16  # bf16 fwd / f32 bwd wire (MG)
         for m in M_SWEEP:
-            prof = multi_analytic_profile(
-                stack, LM_TESTBED, device_slowdowns=LM_FLEET_SLOWDOWNS[:m],
-                sample_bytes=RAW_SAMPLE_BYTES)
-            net = lm_star_network(m)
-            lat = solve_multi(prof, net, BATCH, objective="latency")
-            thr = solve_multi(prof, net, BATCH, objective="throughput")
-            sim = simulate_iteration_multi(prof, net, lat.schedule)
-            t_edge = t_total_multi(prof, net,
-                                   _single_worker(prof, "edge")).total
-            t_cloud = t_total_multi(prof, net,
-                                    _single_worker(prof, "cloud")).total
+            fleet = Fleet.lm_default(m=m)
+            lat = plan(stack, fleet, BATCH, objective="latency")
+            thr = plan(stack, fleet, BATCH, objective="throughput")
+            sim = lat.simulate()
+            res = lat.result
             rows.append({
-                "family": family, "M": m, "layers": prof.num_layers,
+                "family": family, "M": m, "layers": lat.profile.num_layers,
                 "t_total": lat.t_total,
                 "t_sim": sim,
                 "sim_rel_err": abs(sim - lat.t_total) / lat.t_total,
                 "t_period_lat": lat.t_period,
                 "t_period_thr": thr.t_period,
                 "period_gain": lat.t_period / thr.t_period,
-                "speedup_all_edge": t_edge / lat.t_total,
-                "speedup_all_cloud": t_cloud / lat.t_total,
-                "lps_solved": lat.n_lp_solved,
-                "candidates": lat.n_candidates,
-                "pruned": lat.n_pruned,
+                "speedup_all_edge": lat.baseline("edge") / lat.t_total,
+                "speedup_all_cloud": lat.baseline("cloud") / lat.t_total,
+                "lps_solved": res.n_lp_solved,
+                "candidates": res.n_candidates,
+                "pruned": res.n_pruned,
                 "schedule_lat": lat.schedule.describe(),
                 "schedule_thr": thr.schedule.describe(),
             })
@@ -136,8 +101,7 @@ def run() -> str:
                         "period_gain", "speedup_all_edge",
                         "speedup_all_cloud"),
                  title=f"LM fleet (T={SEQ_LEN}, B={BATCH}, "
-                       f"{RAW_SAMPLE_BYTES/1e6:.0f}MB raw samples, "
-                       f"bf16 fwd / f32 bwd wire)")]
+                       f"2MB raw samples, bf16 fwd / f32 bwd wire)")]
     for r in rows:
         out.append(f"  {r['family']:>9} M={r['M']}: "
                    f"lat [{r['schedule_lat']}]")

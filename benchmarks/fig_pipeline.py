@@ -2,18 +2,19 @@
 
 The paper (and ``fig7_8_speedup``) scores one iteration in isolation;
 this benchmark measures what hybrid parallelism buys once consecutive
-minibatches are *pipelined*.  Two sections:
+minibatches are *pipelined*.  Two sections, both planned through
+``repro.api`` (latency- vs throughput-objective plans):
 
 * **Table II profiles** (3-worker, synthetic N-layer networks) — for each
-  network, the latency-optimal vs throughput-optimal schedule
-  (``scheduler.solve`` with ``objective="latency" | "throughput"``), their
-  steady-state periods ``t_period``, the DES-measured period (model
-  validity), and the depth-K wall-clock ``T(K)`` speedup of pipelined
-  execution over K barrier iterations.
+  network, the latency-optimal vs throughput-optimal plan, their
+  steady-state periods ``t_period``, the DES-measured period
+  (``Plan.simulate(K)`` slope — model validity), and the depth-K
+  wall-clock ``T(K)`` speedup of pipelined execution over K barrier
+  iterations.  Pinned-profile triple fleets: the paper's exact stack.
 * **M-device fleet** (the ``fig_multidevice`` fleet, M ∈ {1, 2, 4, 8}) —
-  the same comparison on ``solve_multi`` / ``t_period_multi``, where
-  throughput-optimal schedules genuinely diverge from latency-optimal
-  ones (the recurrence bound punishes round-trip-heavy cuts).
+  the same comparison on star fleets, where throughput-optimal schedules
+  genuinely diverge from latency-optimal ones (the recurrence bound
+  punishes round-trip-heavy cuts).
 
 ``python -m benchmarks.fig_pipeline`` prints the tables;
 ``benchmarks/run.py --json`` folds :func:`run_json` into
@@ -25,14 +26,11 @@ from __future__ import annotations
 import time
 from typing import Dict, List
 
-from benchmarks.common import BATCH, fleet_profile, network, star_network, \
-    table
+from benchmarks.common import BATCH, cnn_model, network, table, \
+    table2_fleet
 from benchmarks.table2_sched_runtime import synthetic_profile
-from repro.core.cost_model import t_total, t_total_multi
-from repro.core.pipeline import (t_period, t_period_breakdown,
-                                 t_period_multi, t_pipeline)
-from repro.core.scheduler import solve, solve_multi
-from repro.core.simulator import simulate_pipeline
+from repro.api import Fleet, plan
+from repro.core.pipeline import t_period_breakdown
 
 NETS = {"lenet5": 5, "alexnet": 8, "vgg16": 16}
 SWEEP_M = (1, 2, 4, 8)
@@ -42,25 +40,24 @@ MODEL = "lenet5"
 K_MEASURE = (32, 64)        # DES period = slope of T(K) between these
 
 
-def _des_period(profile, net, sched) -> float:
+def _des_period(p) -> float:
     k0, k1 = K_MEASURE
-    return (simulate_pipeline(profile, net, sched, k1) -
-            simulate_pipeline(profile, net, sched, k0)) / (k1 - k0)
+    return (p.simulate(K=k1) - p.simulate(K=k0)) / (k1 - k0)
 
 
 def measure_table2() -> List[Dict]:
     rows: List[Dict] = []
     for name, n in NETS.items():
-        profile = synthetic_profile(n)
-        net = network(EDGE_CLOUD_MBPS)
+        fleet = Fleet.from_profile(synthetic_profile(n),
+                                   network(EDGE_CLOUD_MBPS))
         t0 = time.perf_counter()
-        lat = solve(profile, net, B=64)
-        thr = solve(profile, net, B=64, objective="throughput")
+        lat = plan(None, fleet, B=64)
+        thr = plan(None, fleet, B=64, objective="throughput")
         dt = time.perf_counter() - t0
-        des = _des_period(profile, net, thr.schedule)
+        des = _des_period(thr)
         k = SWEEP_K[-1]
         barrier_k = k * lat.t_total
-        pipe_k = t_pipeline(profile, net, thr.schedule, k)
+        pipe_k = thr.pipeline_time(k)
         rows.append({
             "network": name, "layers": n, "M": 1, "sched_s": dt,
             "pipeline_depth": k,
@@ -69,7 +66,7 @@ def measure_table2() -> List[Dict]:
             "t_period_thr": thr.t_period,
             "t_period_des": des,
             "period_rel_err": abs(des - thr.t_period) / thr.t_period,
-            "bottleneck": t_period_breakdown(profile, net,
+            "bottleneck": t_period_breakdown(thr.profile, thr.network,
                                              thr.schedule)["bottleneck"],
             "speedup_pipelined": barrier_k / pipe_k,
             "schedule_lat": lat.schedule.describe(),
@@ -81,17 +78,20 @@ def measure_table2() -> List[Dict]:
 def measure_fleet() -> List[Dict]:
     rows: List[Dict] = []
     B = BATCH[MODEL]
+    model = cnn_model(MODEL)
     for m in SWEEP_M:
-        profile = fleet_profile(MODEL, m)
-        net = star_network(m, EDGE_CLOUD_MBPS)
+        spec = table2_fleet(MODEL, EDGE_CLOUD_MBPS, m=m, topology="star")
+        # profile pinned outside the timer: sched_s tracks the search
+        # alone, comparable with prior BENCH records
+        fleet = Fleet.from_profile(spec.profile_for(model), spec.network())
         t0 = time.perf_counter()
-        lat = solve_multi(profile, net, B)
-        thr = solve_multi(profile, net, B, objective="throughput")
+        lat = plan(model, fleet, B)
+        thr = plan(model, fleet, B, objective="throughput")
         dt = time.perf_counter() - t0
-        des = _des_period(profile, net, thr.schedule)
+        des = _des_period(thr)
         k = SWEEP_K[-1]
         barrier_k = k * lat.t_total
-        pipe_k = t_pipeline(profile, net, thr.schedule, k)
+        pipe_k = thr.pipeline_time(k)
         rows.append({
             "M": m, "sched_s": dt,
             "pipeline_depth": k,
@@ -104,7 +104,7 @@ def measure_fleet() -> List[Dict]:
             "speedup_pipelined": barrier_k / pipe_k,
             "schedule_lat": lat.schedule.describe(),
             "schedule_thr": thr.schedule.describe(),
-            "_sched_thr": thr.schedule,     # object, stripped from JSON
+            "_plan_thr": thr,               # Plan object, stripped from JSON
         })
     return rows
 
@@ -127,21 +127,19 @@ def run() -> str:
     out += [f"  {r['network']}: {r['schedule_thr']}" for r in t2]
     out += [f"  M={r['M']}: {r['schedule_thr']}" for r in fl]
     # depth sweep on the largest fleet: model vs simulated wall clock
-    # (reuse the schedule measure_fleet already solved)
-    profile = fleet_profile(MODEL, SWEEP_M[-1])
-    net = star_network(SWEEP_M[-1], EDGE_CLOUD_MBPS)
-    sched = fl[-1]["_sched_thr"]
+    # (reuse the plan measure_fleet already solved)
+    thr = fl[-1]["_plan_thr"]
     out.append(f"\nT(K) on the M={SWEEP_M[-1]} throughput schedule "
                f"(model | DES):")
     for kk in SWEEP_K:
-        out.append(f"  K={kk:>2}: {t_pipeline(profile, net, sched, kk):.3f}"
-                   f" | {simulate_pipeline(profile, net, sched, kk):.3f}")
+        out.append(f"  K={kk:>2}: {thr.pipeline_time(kk):.3f}"
+                   f" | {thr.simulate(K=kk):.3f}")
     return "\n".join(out)
 
 
 def run_json() -> Dict[str, List[Dict]]:
     """Rows for the ``pipeline`` section of ``BENCH_sched.json``
-    (``_``-prefixed keys hold schedule objects and are stripped)."""
+    (``_``-prefixed keys hold Plan objects and are stripped)."""
     return {"table2": measure_table2(),
             "fleet": [{k: v for k, v in r.items()
                        if not k.startswith("_")}

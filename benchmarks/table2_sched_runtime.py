@@ -5,6 +5,9 @@ order of magnitude and scales ~N^2 in the cut enumeration.  The batched
 engine (one stacked simplex over all candidate LPs + dominance pruning)
 solves the same search 10-50x faster with identical answers; both are
 timed here and the speedup is the tracked perf metric (BENCH_sched.json).
+
+Plans through ``repro.api`` against a pinned-profile triple fleet; the
+``backend`` knob selects the stacked vs scalar simplex.
 """
 from __future__ import annotations
 
@@ -14,8 +17,8 @@ from typing import Dict, List
 import numpy as np
 
 from benchmarks.common import network, table
+from repro.api import Fleet, plan
 from repro.core.cost_model import HierProfile
-from repro.core.scheduler import solve
 
 NETS = {"lenet5": 5, "alexnet": 8, "vgg16": 16, "vgg19": 19,
         "googlenet": 22, "resnet34": 34}
@@ -36,10 +39,9 @@ def measure(include_reference: bool = True) -> List[Dict]:
     """Time both backends per network; assert they agree on the answer."""
     rows: List[Dict] = []
     for name, n in NETS.items():
-        profile = synthetic_profile(n)
-        net = network(3.0)
+        fleet = Fleet.from_profile(synthetic_profile(n), network(3.0))
         t0 = time.perf_counter()
-        res_b = solve(profile, net, B=64)
+        res_b = plan(None, fleet, B=64).result
         dt_b = time.perf_counter() - t0
         row = {"network": name, "layers": n, "M": 1,
                "batched_s": dt_b, "lps_solved": res_b.n_lp_solved,
@@ -49,7 +51,7 @@ def measure(include_reference: bool = True) -> List[Dict]:
                "schedule": res_b.schedule.describe()}
         if include_reference:
             t0 = time.perf_counter()
-            res_r = solve(profile, net, B=64, backend="reference")
+            res_r = plan(None, fleet, B=64, backend="reference").result
             dt_r = time.perf_counter() - t0
             assert res_r.t_total == res_b.t_total, \
                 f"{name}: backends disagree ({res_r.t_total} vs {res_b.t_total})"

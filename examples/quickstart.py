@@ -1,26 +1,23 @@
-"""Quickstart: HierTrain end-to-end on the paper's own setting.
+"""Quickstart: HierTrain end-to-end through the one front door,
+``repro.api``.
 
-LeNet-5-style CNN + synthetic CIFAR-shaped data on the mobile-edge-cloud
-testbed: profile -> Algorithm 1 schedule -> hybrid-parallel training with
-exact SGD semantics -> per-iteration time vs All-Edge / All-Cloud.
+LeNet-5-style CNN + synthetic CIFAR-shaped data on the paper's
+mobile-edge-cloud testbed: build a ``Fleet``, ``plan()`` the Algorithm-1
+schedule, read the ``Plan.explain()`` breakdown, then train with the
+plan's jitted hybrid-SGD step — whose update must match vanilla SGD
+bit-for-bit (exact batch-B semantics).
 
-    PYTHONPATH=src python examples/quickstart.py [--steps 40]
+    PYTHONPATH=src python examples/quickstart.py [--steps 40] [--m 2]
 """
 import argparse
 
 import jax
 import numpy as np
 
-from repro.core.baselines import all_on_one
-from repro.core.cost_model import Network
-from repro.core.hybrid_step import (hybrid_step_from_schedule,
-                                    reference_sgd_step, split_batch)
-from repro.core.profiler import PAPER_TESTBED, analytic_profile
-from repro.core.scheduler import solve
+from repro.api import Fleet, plan
+from repro.core.hybrid_step import reference_sgd_step
 from repro.data.pipeline import SyntheticImages
 from repro.models.cnn import lenet5
-
-MBPS = 1e6 / 8.0
 
 
 def main() -> None:
@@ -28,42 +25,41 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=40)
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--edge-cloud-mbps", type=float, default=3.0)
+    ap.add_argument("--m", type=int, default=1,
+                    help="number of devices (1 = the paper's triple)")
     args = ap.parse_args()
 
     model = lenet5()
-    profile = analytic_profile(model, PAPER_TESTBED)
-    net = Network(bw_de=5.0 * MBPS, bw_ec=args.edge_cloud_mbps * MBPS)
+    fleet = Fleet.from_table2(model="lenet5", m=args.m,
+                              edge_cloud_mbps=args.edge_cloud_mbps)
 
     # --- optimization stage (Algorithm 1) -------------------------------
-    res = solve(profile, net, args.batch)
-    sched = res.schedule
-    print(f"schedule: {sched.describe()}")
-    print(f"predicted iteration: {res.t_total:.3f}s "
-          f"(all-edge {all_on_one(profile, net, args.batch, 'edge').t_total:.3f}s, "
-          f"all-cloud {all_on_one(profile, net, args.batch, 'cloud').t_total:.3f}s)")
+    p = plan(model, fleet, args.batch)
+    print(p.explain())
+    print(f"simulated iteration (DES): {p.simulate():.3f}s")
 
     # --- hierarchical training stage ------------------------------------
     data = SyntheticImages(model.input_shape, model.num_classes,
                            args.batch, seed=0)
-    params = model.init(jax.random.PRNGKey(0))
-    ref_params = params
-    for step in range(args.steps):
-        b = data.batch(step)
-        x, y = jax.numpy.asarray(b["x"]), jax.numpy.asarray(b["labels"])
-        params, loss = hybrid_step_from_schedule(model, params, x, y,
-                                                 sched, lr=0.05)
-        if (step + 1) % 10 == 0:
-            # hybrid parallelism must match vanilla SGD bit-for-bit
-            ref_params, ref_loss = reference_sgd_step(model, ref_params,
-                                                      x, y, 0.05)
+    step = p.step_fn(lr=0.05)
+    params = p.init_params(jax.random.PRNGKey(0))
+    # the jitted step donates its params; the reference copy needs its
+    # own buffers
+    ref_params = jax.tree.map(jax.numpy.array, params)
+    for i in range(args.steps):
+        b = data.batch(i)
+        x, y = b["x"], b["labels"]
+        params, loss = step(params, x, y)
+        ref_params, _ = reference_sgd_step(model, ref_params,
+                                           jax.numpy.asarray(x),
+                                           jax.numpy.asarray(y), 0.05)
+        if (i + 1) % 10 == 0 or i + 1 == args.steps:
+            # hybrid parallelism must match vanilla SGD
             drift = max(float(np.abs(np.asarray(a - b)).max())
                         for a, b in zip(jax.tree.leaves(params),
                                         jax.tree.leaves(ref_params)))
-            print(f"step {step+1:3d}: loss={float(loss):.4f} "
+            print(f"step {i+1:3d}: loss={float(loss):.4f} "
                   f"(max drift vs vanilla SGD: {drift:.2e})")
-        else:
-            ref_params, _ = reference_sgd_step(model, ref_params, x, y,
-                                               0.05)
     print("done — hybrid parallelism preserved SGD semantics.")
 
 

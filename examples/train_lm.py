@@ -6,6 +6,13 @@ injection.
     PYTHONPATH=src python examples/train_lm.py --steps 60 --fail-at 30
     PYTHONPATH=src python examples/train_lm.py --steps 60 --resume
 
+``--hier`` instead trains the same config *hierarchically* across the LM
+mobile-edge-cloud fleet through the ``repro.api`` front door: plan the
+Algorithm-1 cut/split, print the breakdown, run the straggler-aware
+hybrid-SGD loop:
+
+    PYTHONPATH=src python examples/train_lm.py --hier --steps 20 --devices 2
+
 ~100M params needs --size full (slow on CPU); the default "small" config
 (~20M) runs a few hundred steps in minutes and exercises the same code.
 """
@@ -41,9 +48,16 @@ def main() -> None:
     ap.add_argument("--resume", action="store_true",
                     help="(restart picks up the latest checkpoint "
                     "automatically; flag is informational)")
+    ap.add_argument("--hier", action="store_true",
+                    help="train hierarchically across the LM fleet via "
+                    "repro.api instead of the single-host loop")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="fleet device count for --hier")
     args = ap.parse_args()
 
     cfg = SIZES[args.size]
+    if args.hier:
+        return hier_main(cfg, args)
     model = build_model(cfg)
     opt = get_optimizer("adamw", lr=3e-4, weight_decay=0.0)
     state = init_state(model, opt, jax.random.PRNGKey(0))
@@ -64,6 +78,32 @@ def main() -> None:
     hist = out["history"]
     if len(hist) >= 2:
         print(f"loss: {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+
+
+def hier_main(cfg, args) -> None:
+    """Plan and run hierarchical LM training through repro.api."""
+    from repro.api import Fleet, plan
+    from repro.models.lm.layerstack import lm_layerstack
+
+    stack = lm_layerstack(cfg, seq_len=args.seq)
+    fleet = Fleet.lm_default(m=args.devices)
+    p = plan(stack, fleet, args.batch)
+    print(p.explain())
+
+    class TokenData:
+        """Stateless batch source in the loop's {"x", "labels"} shape."""
+
+        def batch(self, step):
+            key = jax.random.fold_in(jax.random.PRNGKey(0), step)
+            x, labels = stack.dummy_batch(key, args.batch)
+            return {"x": x, "labels": labels}
+
+    out = p.train(TokenData(), steps=args.steps, lr=0.05,
+                  log=lambda s: print(s))
+    hist = out["history"]
+    print(f"hier loss: {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f} "
+          f"(modeled fleet wall clock {out['wall']:.1f}s, final schedule "
+          f"{out['final_schedule'].describe()})")
 
 
 if __name__ == "__main__":

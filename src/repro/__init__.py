@@ -1,0 +1,38 @@
+"""HierTrain reproduction — public surface (DESIGN.md §9).
+
+The supported API is the ``Fleet``/``Plan`` front door:
+
+* :class:`repro.api.Fleet` — M heterogeneous devices + edge + cloud
+  (the paper's triple is ``M = 1``), with ``from_table2()`` /
+  ``lm_default()`` / ``from_profile()`` constructors.
+* :func:`repro.api.plan` — Algorithm 1 over a (model, fleet, B) triple.
+* :class:`repro.api.Plan` — the decision: schedule, predicted
+  ``t_total``/``t_period``, ``.simulate()``, ``.step_fn()``,
+  ``.train()``, ``.explain()``.
+* :func:`repro.core.layerstack.as_layerstack` — the model adapter seam.
+
+Everything else under ``repro.*`` is internal: stable enough to read,
+not a compatibility surface.  The pre-facade entry points (``solve``,
+``t_total*``, ``simulate_iteration*``, ``run_*_hier_loop``) are
+deprecation shims over the facade.
+
+Exports resolve lazily so ``import repro`` stays cheap (no jax import
+until the facade is touched).
+"""
+from __future__ import annotations
+
+__all__ = ["Fleet", "Plan", "plan", "as_layerstack"]
+
+
+def __getattr__(name):
+    if name in ("Fleet", "Plan", "plan"):
+        from repro import api
+        return getattr(api, name)
+    if name == "as_layerstack":
+        from repro.core.layerstack import as_layerstack
+        return as_layerstack
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + __all__)

@@ -1,0 +1,24 @@
+"""Deprecation plumbing for the legacy pre-``Fleet``/``Plan`` surface.
+
+Every legacy entry point listed in DESIGN.md §9 calls
+:func:`warn_deprecated` exactly once per call site before delegating to
+the facade.  Messages always start with the fully-qualified old name
+(``repro.…``) so the tier-1 warning filter (``pytest.ini``) can turn
+*in-repo* uses of a deprecated path into hard errors without touching
+third-party DeprecationWarnings.
+"""
+from __future__ import annotations
+
+import warnings
+
+
+def warn_deprecated(old: str, new: str) -> None:
+    """Emit one DeprecationWarning naming the exact replacement call.
+
+    ``stacklevel=3`` attributes the warning to the *caller of the shim*
+    (helper → shim → caller), which is what the scoped ``error::``
+    filter in ``pytest.ini`` matches on.
+    """
+    warnings.warn(
+        f"{old} is deprecated; use {new} instead (see DESIGN.md §9).",
+        DeprecationWarning, stacklevel=3)

@@ -28,7 +28,7 @@ from typing import Dict, List, Sequence, Tuple
 import numpy as np
 
 from repro.core.cost_model import (WIDX, Breakdown, HierProfile, Network,
-                                   Schedule, t_total)
+                                   Schedule, _t_total)
 
 
 @dataclasses.dataclass
@@ -44,7 +44,7 @@ def all_on_one(profile: HierProfile, net: Network, B: int, worker: str,
     """All-Edge / All-Cloud / device-only: one worker trains everything."""
     sched = Schedule(worker_o=worker, worker_s=worker, worker_l=worker,
                      m_s=0, m_l=0, b_o=B, b_s=0, b_l=0)
-    bd = t_total(profile, net, sched, origin)
+    bd = _t_total(profile, net, sched, origin)
     return BaselineResult(
         name=f"all-{worker}", t_total=bd.total,
         placement=[worker] * profile.num_layers,

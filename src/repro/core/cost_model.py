@@ -179,11 +179,11 @@ def bw_matrix(net: Network) -> np.ndarray:
                     np.float64)
 
 
-def t_total_batch(profile: HierProfile, net: Network,
-                  o_idx: np.ndarray, s_idx: np.ndarray, l_idx: np.ndarray,
-                  ms: np.ndarray, ml: np.ndarray, b: np.ndarray,
-                  origin: str = "device") -> np.ndarray:
-    """Vectorized :func:`t_total` over K candidate schedules.
+def _t_total_batch(profile: HierProfile, net: Network,
+                   o_idx: np.ndarray, s_idx: np.ndarray, l_idx: np.ndarray,
+                   ms: np.ndarray, ml: np.ndarray, b: np.ndarray,
+                   origin: str = "device") -> np.ndarray:
+    """Vectorized :func:`_t_total` over K candidate schedules.
 
     Parameters
     ----------
@@ -489,8 +489,8 @@ def _validate_multi(profile: MultiProfile, sched: MultiSchedule) -> None:
         "schedule must name every worker exactly once"
 
 
-def t_total_multi(profile: MultiProfile, net: StarNetwork,
-                  sched: MultiSchedule) -> Breakdown:
+def _t_total_multi(profile: MultiProfile, net: StarNetwork,
+                   sched: MultiSchedule) -> Breakdown:
     """Exact generalized Eq. (12) for an integer M-device schedule.
 
     Phase structure (DESIGN.md §6): phase 1 runs every TASK-S front-end in
@@ -577,11 +577,11 @@ def t_total_multi(profile: MultiProfile, net: StarNetwork,
     )
 
 
-def t_total_multi_batch(profile: MultiProfile, net: StarNetwork,
-                        o_idx: np.ndarray, s_idx: np.ndarray,
-                        l_idx: np.ndarray, ms: np.ndarray, ml: np.ndarray,
-                        b: np.ndarray) -> np.ndarray:
-    """Vectorized :func:`t_total_multi` over K candidate schedules.
+def _t_total_multi_batch(profile: MultiProfile, net: StarNetwork,
+                         o_idx: np.ndarray, s_idx: np.ndarray,
+                         l_idx: np.ndarray, ms: np.ndarray, ml: np.ndarray,
+                         b: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`_t_total_multi` over K candidate schedules.
 
     ``o_idx, l_idx, ml``: ``[K]``; ``s_idx, ms``: ``[K, M]``;
     ``b``: ``[K, M+2]`` split ``(b_o, b_s[0..M-1], b_l)``.  Every arithmetic
@@ -662,9 +662,15 @@ def t_input(profile: HierProfile, net: Network, worker: str, b: int,
     return b * profile.sample_bytes / net.bw(origin, worker)
 
 
-def t_total(profile: HierProfile, net: Network, sched: Schedule,
-            origin: str = "device") -> Breakdown:
-    """Exact Eq. (12) evaluation for an (integer) schedule."""
+def _t_total(profile: HierProfile, net: Network, sched: Schedule,
+             origin: str = "device") -> Breakdown:
+    """Exact Eq. (12) evaluation for an (integer) schedule.
+
+    This is the canonical *three-worker* evaluation — the correctness
+    oracle the M=1 equivalence suite compares the star model against,
+    and the only path that supports ``origin != "device"`` or
+    degenerate schedules that repeat a worker across roles (the
+    all-on-one baselines)."""
     N = profile.num_layers
     assert 0 <= sched.m_s <= sched.m_l <= N, "need 0 <= m_s <= m_l <= N"
     if sched.m_s == 0:
@@ -728,3 +734,69 @@ def t_total(profile: HierProfile, net: Network, sched: Schedule,
         comm_activation=(t_s_out + t_l_out) + (t_s_gout + t_l_gout),
         comm_weightgrad=max(t_wg_s, t_wg_l),
     )
+
+
+# ---------------------------------------------------------------------------
+# Deprecated public surface (DESIGN.md §9).  The forked t_total* pairs are
+# shims over the unified model: the 3-worker entry points lift their
+# arguments onto the star types and evaluate the M-device model, which is
+# bit-for-bit identical at M = 1 (the equivalence suite asserts it).
+# Non-collapsible corners — ``origin != "device"`` and degenerate
+# schedules that repeat a worker (the all-on-one baselines) — fall back
+# to the retained 3-worker oracle.
+# ---------------------------------------------------------------------------
+
+
+def t_total(profile: HierProfile, net: Network, sched: Schedule,
+            origin: str = "device") -> Breakdown:
+    """Deprecated: use ``repro.api.plan(...).breakdown`` (Plan carries the
+    exact Eq.-12 evaluation of its chosen schedule)."""
+    from repro.core._deprecation import warn_deprecated
+    warn_deprecated("repro.core.cost_model.t_total()",
+                    "repro.api.plan(model, fleet, B).breakdown")
+    distinct = len({sched.worker_o, sched.worker_s, sched.worker_l}) == 3
+    if origin == "device" and distinct:
+        return _t_total_multi(MultiProfile.from_hier(profile),
+                              StarNetwork.from_network(net),
+                              MultiSchedule.from_schedule(sched))
+    return _t_total(profile, net, sched, origin)
+
+
+def t_total_batch(profile: HierProfile, net: Network,
+                  o_idx: np.ndarray, s_idx: np.ndarray, l_idx: np.ndarray,
+                  ms: np.ndarray, ml: np.ndarray, b: np.ndarray,
+                  origin: str = "device") -> np.ndarray:
+    """Deprecated: the batched kernels are internal to the facade — use
+    ``repro.api.plan`` (the scheduler scores candidates itself)."""
+    from repro.core._deprecation import warn_deprecated
+    warn_deprecated("repro.core.cost_model.t_total_batch()",
+                    "repro.api.plan(model, fleet, B)")
+    if origin == "device":
+        return _t_total_multi_batch(
+            MultiProfile.from_hier(profile), StarNetwork.from_network(net),
+            np.asarray(o_idx), np.asarray(s_idx)[:, None],
+            np.asarray(l_idx), np.asarray(ms)[:, None], np.asarray(ml),
+            np.asarray(b))
+    return _t_total_batch(profile, net, o_idx, s_idx, l_idx, ms, ml, b,
+                          origin)
+
+
+def t_total_multi(profile: MultiProfile, net: StarNetwork,
+                  sched: MultiSchedule) -> Breakdown:
+    """Deprecated: use ``repro.api.plan(...).breakdown``."""
+    from repro.core._deprecation import warn_deprecated
+    warn_deprecated("repro.core.cost_model.t_total_multi()",
+                    "repro.api.plan(model, fleet, B).breakdown")
+    return _t_total_multi(profile, net, sched)
+
+
+def t_total_multi_batch(profile: MultiProfile, net: StarNetwork,
+                        o_idx: np.ndarray, s_idx: np.ndarray,
+                        l_idx: np.ndarray, ms: np.ndarray, ml: np.ndarray,
+                        b: np.ndarray) -> np.ndarray:
+    """Deprecated: use ``repro.api.plan`` (internal scoring kernel)."""
+    from repro.core._deprecation import warn_deprecated
+    warn_deprecated("repro.core.cost_model.t_total_multi_batch()",
+                    "repro.api.plan(model, fleet, B)")
+    return _t_total_multi_batch(profile, net, o_idx, s_idx, l_idx, ms, ml,
+                                b)

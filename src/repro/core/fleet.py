@@ -1,0 +1,228 @@
+"""``Fleet`` — the unified topology primitive behind ``repro.api``
+(DESIGN.md §9).
+
+A fleet is *M heterogeneous devices + one edge server + one cloud*; the
+paper's classic (device, edge, cloud) triple is exactly a fleet at
+``M = 1``.  A :class:`Fleet` carries everything the scheduler needs that
+is **hardware**, not workload: per-tier compute specs, per-device compute
+slowdowns, per-device uplinks and the edge→cloud backhaul — or, in
+*pinned-profile* mode, an already-built profile/network pair (used by the
+synthetic Table-II benchmarks and by the legacy shims).
+
+Topology nativity
+-----------------
+``topology`` records which concrete stack a fleet resolves to:
+
+* ``"triple"`` — the paper's 3-worker types (:class:`HierProfile` /
+  :class:`Network` / ``Schedule``) and their scheduler/DES.  Only valid
+  at ``M = 1``.
+* ``"star"`` — the M-device generalization (:class:`MultiProfile` /
+  :class:`StarNetwork` / ``MultiSchedule``).
+
+For the **latency** objective the two stacks are bit-for-bit equivalent
+at ``M = 1`` (the equivalence suite asserts it), so the choice is
+invisible.  The discrete-event simulators and the steady-state period
+model, however, shape network pipes differently (per-destination TC
+input classes on the star — see EXPERIMENTS.md §Fig.6), so DES traces
+and throughput-objective scores agree only on schedules without input
+uploads.  ``topology="auto"`` therefore resolves to ``"triple"`` at
+``M = 1`` (the exact paper stack) and ``"star"`` otherwise; benchmarks
+that sweep M pass ``topology="star"`` so the M=1 row stays comparable to
+the rest of the sweep.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core.cost_model import (HierProfile, MultiProfile, Network,
+                                   StarNetwork)
+from repro.core.profiler import (ALEXNET_TESTBED, LM_TESTBED, PAPER_TESTBED,
+                                 WorkerSpec, analytic_profile,
+                                 multi_analytic_profile)
+
+MBPS = 1e6 / 8.0                      # paper quotes Mbps; model uses B/s
+
+TRIPLE = "triple"
+STAR = "star"
+
+# The paper's §VI-B testbed radios: mobile-edge fixed at 5 Mbps.
+MOBILE_EDGE_MBPS = 5.0
+
+# Heterogeneous CNN device fleet (deterministic so BENCH records stay
+# comparable across PRs): per-device compute slowdown vs the paper's
+# reference device, and per-device uplink Mbps.  The first device is the
+# paper's testbed device exactly (slowdown 1.0, 5 Mbps).
+FLEET_SLOWDOWNS = (1.0, 1.4, 1.9, 2.5, 1.2, 1.6, 2.2, 3.0)
+FLEET_UPLINK_MBPS = (5.0, 4.5, 4.0, 3.5, 5.0, 4.2, 3.8, 3.2)
+
+# LM fleet: same heterogeneity shape on LTE/WiFi-class radios (raw
+# payloads are MBs), device-resident ~2 MB raw samples tokenized
+# on-device (see benchmarks/fig_lm_fleet.py for the workload story).
+LM_FLEET_SLOWDOWNS = (1.0, 1.4, 1.9, 2.5)
+LM_FLEET_UPLINK_MBPS = (50.0, 40.0, 30.0, 25.0)
+LM_BACKHAUL_MBPS = 200.0
+LM_RAW_SAMPLE_BYTES = 2e6
+
+# Per-model worker calibration — the paper's profiling stage measures
+# each model on each worker, so effective throughput is model-specific.
+TABLE2_TESTBEDS: Dict[str, Dict[str, WorkerSpec]] = {
+    "lenet5": PAPER_TESTBED,
+    "alexnet": ALEXNET_TESTBED,
+}
+
+
+@dataclasses.dataclass
+class Fleet:
+    """M devices + edge + cloud, in spec mode or pinned-profile mode.
+
+    Spec mode (the default constructors): ``workers`` maps the three
+    tiers (``device``/``edge``/``cloud``) to :class:`WorkerSpec`;
+    ``device_slowdowns[i]`` scales the device tier for device *i*;
+    ``uplink_mbps[i]`` is device *i*'s radio; ``backhaul_mbps`` the
+    edge↔cloud link; ``sample_bytes`` optionally overrides the model's
+    per-sample wire size (the LM fleet's raw-payload regime).
+
+    Pinned-profile mode (:meth:`from_profile`): ``_profile``/``_network``
+    hold a prebuilt profile/network pair and the spec fields are unused.
+    """
+    workers: Optional[Dict[str, WorkerSpec]] = None
+    device_slowdowns: Tuple[float, ...] = (1.0,)
+    uplink_mbps: Tuple[float, ...] = (MOBILE_EDGE_MBPS,)
+    backhaul_mbps: float = 3.0
+    sample_bytes: Optional[float] = None
+    topology: str = "auto"
+    _profile: Optional[Union[HierProfile, MultiProfile]] = None
+    _network: Optional[Union[Network, StarNetwork]] = None
+
+    def __post_init__(self) -> None:
+        if self.topology == "auto":
+            self.topology = TRIPLE if self.num_devices == 1 else STAR
+        if self.topology not in (TRIPLE, STAR):
+            raise ValueError(f"unknown fleet topology: {self.topology!r}")
+        if self.topology == TRIPLE and self.num_devices != 1:
+            raise ValueError("the classic triple has exactly one device; "
+                             "use topology='star' for M >= 2")
+        if self._profile is None:
+            assert len(self.device_slowdowns) == len(self.uplink_mbps), \
+                "need one uplink per device"
+
+    # ---- constructors ---------------------------------------------------
+
+    @classmethod
+    def from_profile(cls, profile: Union[HierProfile, MultiProfile],
+                     net: Union[Network, StarNetwork],
+                     topology: str = "auto") -> "Fleet":
+        """Wrap an existing profile/network pair (synthetic benchmarks,
+        measured profiles, legacy shims).  A :class:`HierProfile` +
+        :class:`Network` pair is triple-native; a :class:`MultiProfile` +
+        :class:`StarNetwork` pair is star-native (even at M = 1)."""
+        if isinstance(profile, MultiProfile):
+            assert isinstance(net, StarNetwork), \
+                "a MultiProfile needs a StarNetwork"
+            assert profile.num_devices == net.num_devices
+            if topology == "auto":
+                topology = STAR
+            if topology != STAR:
+                raise ValueError(
+                    "a MultiProfile/StarNetwork pair is star-native; "
+                    "reduce with profile.three_worker() for a triple fleet")
+            m = profile.num_devices
+        else:
+            assert isinstance(profile, HierProfile) and \
+                isinstance(net, Network), \
+                "a HierProfile needs a Network"
+            if topology == "auto":
+                topology = TRIPLE
+            if topology != TRIPLE:
+                raise ValueError(
+                    "a HierProfile/Network pair is triple-native; lift "
+                    "with MultiProfile.from_hier / StarNetwork."
+                    "from_network for a star fleet")
+            m = 1
+        return cls(device_slowdowns=(1.0,) * m, uplink_mbps=(0.0,) * m,
+                   topology=topology, _profile=profile, _network=net)
+
+    @classmethod
+    def from_table2(cls, model: str = "lenet5", m: int = 1,
+                    edge_cloud_mbps: float = 3.0,
+                    topology: str = "auto") -> "Fleet":
+        """The paper-calibrated CNN testbed (§VI-B) extended to the
+        deterministic heterogeneous device fleet of the M-sweeps.
+        ``model`` picks the per-model worker calibration
+        (``lenet5`` / ``alexnet``); ``m = 1`` is the paper's exact
+        testbed (slowdown 1.0, 5 Mbps uplink)."""
+        assert 1 <= m <= len(FLEET_SLOWDOWNS)
+        return cls(workers=TABLE2_TESTBEDS[model],
+                   device_slowdowns=FLEET_SLOWDOWNS[:m],
+                   uplink_mbps=FLEET_UPLINK_MBPS[:m],
+                   backhaul_mbps=edge_cloud_mbps, topology=topology)
+
+    @classmethod
+    def lm_default(cls, m: int = 1,
+                   backhaul_mbps: float = LM_BACKHAUL_MBPS,
+                   sample_bytes: float = LM_RAW_SAMPLE_BYTES) -> "Fleet":
+        """The LM fleet (DESIGN.md §8): mobile-NPU/edge-GPU/cloud tiers,
+        LTE/WiFi-class radios, device-resident ~2 MB raw samples.
+        Star-native at every M so sweeps stay internally comparable."""
+        assert 1 <= m <= len(LM_FLEET_SLOWDOWNS)
+        return cls(workers=LM_TESTBED,
+                   device_slowdowns=LM_FLEET_SLOWDOWNS[:m],
+                   uplink_mbps=LM_FLEET_UPLINK_MBPS[:m],
+                   backhaul_mbps=backhaul_mbps, sample_bytes=sample_bytes,
+                   topology=STAR)
+
+    # ---- views ----------------------------------------------------------
+
+    @property
+    def num_devices(self) -> int:
+        if self._profile is not None:
+            return self._profile.num_devices \
+                if isinstance(self._profile, MultiProfile) else 1
+        return len(self.device_slowdowns)
+
+    M = num_devices
+
+    @property
+    def pinned(self) -> bool:
+        return self._profile is not None
+
+    def profile_for(self, model=None
+                    ) -> Union[HierProfile, MultiProfile]:
+        """The native profile: pinned, or built from the model via the
+        analytic profiler (triple → :class:`HierProfile`, star →
+        :class:`MultiProfile`)."""
+        if self._profile is not None:
+            return self._profile
+        if model is None:
+            raise ValueError(
+                "this Fleet carries worker specs, not a profile — pass a "
+                "model to plan()/profile_for(), or build the Fleet with "
+                "Fleet.from_profile(profile, net)")
+        if self.topology == TRIPLE:
+            return analytic_profile(model, self.workers,
+                                    sample_bytes=self.sample_bytes)
+        return multi_analytic_profile(model, self.workers,
+                                      device_slowdowns=self.device_slowdowns,
+                                      sample_bytes=self.sample_bytes)
+
+    def network(self) -> Union[Network, StarNetwork]:
+        """The native network (triple → :class:`Network`, star →
+        :class:`StarNetwork`)."""
+        if self._network is not None:
+            return self._network
+        if self.topology == TRIPLE:
+            return Network(bw_de=self.uplink_mbps[0] * MBPS,
+                           bw_ec=self.backhaul_mbps * MBPS)
+        return StarNetwork(bw_de=np.array(self.uplink_mbps) * MBPS,
+                           bw_ec=self.backhaul_mbps * MBPS)
+
+    def describe(self) -> str:
+        m = self.num_devices
+        if self.pinned:
+            return f"M={m} ({self.topology}; pinned profile/network)"
+        ups = "/".join(f"{u:g}" for u in self.uplink_mbps)
+        return (f"M={m} ({self.topology}; uplinks {ups} Mbps, "
+                f"backhaul {self.backhaul_mbps:g} Mbps)")

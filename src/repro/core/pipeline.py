@@ -45,8 +45,8 @@ import numpy as np
 
 from repro.core.cost_model import (WIDX, WORKERS, HierProfile, MultiProfile,
                                    MultiSchedule, Network, Schedule,
-                                   StarNetwork, bw_matrix, t_total,
-                                   t_total_multi)
+                                   StarNetwork, _t_total, _t_total_multi,
+                                   bw_matrix)
 
 # Power-iteration horizon for the max-plus eigenvalue: ``_UNFOLD`` steps,
 # slope averaged over the last ``_WINDOW``.  The estimate is exact when
@@ -397,7 +397,7 @@ def t_pipeline(profile: Union[HierProfile, MultiProfile],
     latency as the fill term (DESIGN.md §7)."""
     assert K >= 1
     if isinstance(sched, MultiSchedule):
-        fill = t_total_multi(profile, net, sched).total
+        fill = _t_total_multi(profile, net, sched).total
         return fill + (K - 1) * t_period_multi(profile, net, sched)
-    fill = t_total(profile, net, sched, origin).total
+    fill = _t_total(profile, net, sched, origin).total
     return fill + (K - 1) * t_period(profile, net, sched, origin)

@@ -43,11 +43,12 @@ import numpy as np
 from repro.core import batched_lp
 from repro.core import lp as lp_mod
 from repro.core import pipeline as pipeline_mod
+from repro.core._deprecation import warn_deprecated
 from repro.core.cost_model import (WIDX, WORKERS, Breakdown, HierProfile,
                                    MultiProfile, MultiSchedule, Network,
-                                   Schedule, StarNetwork, bw_matrix, t_total,
-                                   t_total_batch, t_total_multi,
-                                   t_total_multi_batch)
+                                   Schedule, StarNetwork, _t_total,
+                                   _t_total_batch, _t_total_multi,
+                                   _t_total_multi_batch, bw_matrix)
 
 OBJECTIVES = ("latency", "throughput")
 
@@ -230,7 +231,7 @@ def _solve_reference(profile: HierProfile, net: Network, B: int,
                 b_int = _round_batch_split(b, B, allowed)
                 sched = Schedule(wo, ws, wl, m_s, m_l,
                                  int(b_int[0]), int(b_int[1]), int(b_int[2]))
-                bd = t_total(profile, net, sched, origin)
+                bd = _t_total(profile, net, sched, origin)
                 score = bd.total if objective == "latency" else \
                     pipeline_mod.t_period(profile, net, sched, origin)
                 if keep_log:
@@ -337,8 +338,8 @@ def _solve_batched(profile: HierProfile, net: Network, B: int, origin: str,
 
     def score_batch(o, s, l, mss, mll, bb):
         if objective == "latency":
-            return t_total_batch(profile, net, o, s, l, mss, mll, bb,
-                                 origin)
+            return _t_total_batch(profile, net, o, s, l, mss, mll,
+                                  bb, origin)
         return pipeline_mod.t_period_batch(profile, net, o, s, l, mss, mll,
                                            bb, origin)
 
@@ -384,7 +385,7 @@ def _solve_batched(profile: HierProfile, net: Network, B: int, origin: str,
                      int(kms[win]), int(kml[win]),
                      int(b_int[win, 0]), int(b_int[win, 1]),
                      int(b_int[win, 2]))
-    bd = t_total(profile, net, sched, origin)
+    bd = _t_total(profile, net, sched, origin)
     log: List[Tuple[Schedule, float]] = []
     if keep_log:
         for k in np.nonzero(ok)[0]:
@@ -400,22 +401,26 @@ def _solve_batched(profile: HierProfile, net: Network, B: int, origin: str,
                                                           sched, origin))
 
 
-def solve(profile: HierProfile, net: Network, B: int,
-          origin: str = "device",
-          workers: Tuple[str, ...] = WORKERS,
-          keep_log: bool = False,
-          backend: str = "batched",
-          prune: bool = True,
-          objective: str = "latency") -> SchedulerResult:
+def _solve_3w(profile: HierProfile, net: Network, B: int,
+              origin: str = "device",
+              workers: Tuple[str, ...] = WORKERS,
+              keep_log: bool = False,
+              backend: str = "batched",
+              prune: bool = True,
+              objective: str = "latency") -> SchedulerResult:
     """Algorithm 1: enumerate mappings x cuts, LP + round, return the best.
 
-    ``backend="batched"`` (default) solves all candidate LPs as one stacked
-    simplex; ``backend="reference"`` is the sequential scalar oracle.
-    ``prune`` toggles the cut-constant dominance bound (batched only).
-    ``objective="latency"`` (default) minimizes the per-iteration ``T_total``
-    of Eq. 12; ``objective="throughput"`` reuses the same LP stack and
-    pruning but picks the candidate with the smallest steady-state
-    pipelined period ``t_period`` (DESIGN.md §7).
+    This is the canonical *three-worker* engine — the facade
+    (``repro.api.plan``) runs it for triple-native fleets, and it doubles
+    as the correctness oracle the M=1 equivalence suite compares the
+    generalized engine against.  ``backend="batched"`` (default) solves
+    all candidate LPs as one stacked simplex; ``backend="reference"`` is
+    the sequential scalar oracle.  ``prune`` toggles the cut-constant
+    dominance bound (batched only).  ``objective="latency"`` (default)
+    minimizes the per-iteration ``T_total`` of Eq. 12;
+    ``objective="throughput"`` reuses the same LP stack and pruning but
+    picks the candidate with the smallest steady-state pipelined period
+    ``t_period`` (DESIGN.md §7).
     """
     if objective not in OBJECTIVES:
         raise ValueError(f"unknown scheduler objective: {objective!r}")
@@ -426,6 +431,30 @@ def solve(profile: HierProfile, net: Network, B: int,
         raise ValueError(f"unknown scheduler backend: {backend!r}")
     return _solve_batched(profile, net, B, origin, workers, keep_log, prune,
                           objective)
+
+
+def solve(profile: HierProfile, net: Network, B: int,
+          origin: str = "device",
+          workers: Tuple[str, ...] = WORKERS,
+          keep_log: bool = False,
+          backend: str = "batched",
+          prune: bool = True,
+          objective: str = "latency") -> SchedulerResult:
+    """Deprecated shim over the facade (DESIGN.md §9): build a triple
+    fleet from the profile/network pair and plan through ``repro.api``.
+    Results are bit-identical to the historical solver.  Exotic
+    arguments the facade does not model (``origin != "device"``, custom
+    ``workers`` subsets) fall back to the retained 3-worker engine."""
+    warn_deprecated(
+        "repro.core.scheduler.solve()",
+        "repro.api.plan(model, Fleet.from_profile(profile, net), B, ...)")
+    if origin == "device" and tuple(workers) == WORKERS:
+        from repro import api
+        return api.plan(None, api.Fleet.from_profile(profile, net), B,
+                        objective=objective, backend=backend, prune=prune,
+                        keep_log=keep_log).result
+    return _solve_3w(profile, net, B, origin, workers, keep_log, backend,
+                     prune, objective)
 
 
 # ---------------------------------------------------------------------------
@@ -597,7 +626,24 @@ def solve_multi(profile: MultiProfile, net: StarNetwork, B: int,
                 prune: bool = True,
                 refine_passes: int = 4,
                 objective: str = "latency") -> MultiSchedulerResult:
-    """Generalized Algorithm 1 over M devices + edge + cloud.
+    """Deprecated shim over the facade (DESIGN.md §9): build a star fleet
+    from the profile/network pair and plan through ``repro.api``."""
+    warn_deprecated(
+        "repro.core.scheduler.solve_multi()",
+        "repro.api.plan(model, Fleet.from_profile(profile, net), B, ...)")
+    from repro import api
+    return api.plan(None, api.Fleet.from_profile(profile, net), B,
+                    objective=objective, backend=backend, prune=prune,
+                    refine_passes=refine_passes, keep_log=keep_log).result
+
+
+def _solve_multi(profile: MultiProfile, net: StarNetwork, B: int,
+                 keep_log: bool = False, backend: str = "batched",
+                 prune: bool = True,
+                 refine_passes: int = 4,
+                 objective: str = "latency") -> MultiSchedulerResult:
+    """Generalized Algorithm 1 over M devices + edge + cloud — the
+    canonical engine behind ``repro.api.plan`` for star fleets.
 
     Stage A: exhaustive (mapping, shared-cut) sweep — with ``M == 1`` this
     is exactly :func:`solve` (same candidates, same order, same LPs) and the
@@ -625,7 +671,8 @@ def solve_multi(profile: MultiProfile, net: StarNetwork, B: int,
 
     def score_batch(o, s, l, mss, mll, bb):
         if objective == "latency":
-            return t_total_multi_batch(profile, net, o, s, l, mss, mll, bb)
+            return _t_total_multi_batch(profile, net, o, s, l, mss, mll,
+                                        bb)
         return pipeline_mod.t_period_multi_batch(profile, net, o, s, l,
                                                  mss, mll, bb)
 
@@ -720,7 +767,7 @@ def solve_multi(profile: MultiProfile, net: StarNetwork, B: int,
             if keep_log:
                 log.append((best_sched, best_score))
 
-    bd = t_total_multi(profile, net, best_sched)
+    bd = _t_total_multi(profile, net, best_sched)
     return MultiSchedulerResult(schedule=best_sched, breakdown=bd,
                                 t_total=bd.total, n_lp_solved=n_lp,
                                 search_log=log, n_candidates=K,

@@ -204,19 +204,39 @@ def _add_iteration(des: Des, profile: HierProfile, net: Network,
     compute(nm("u_l"), wl, U[l, ml] if bl > 0 else 0.0, [nm("wg_l_down")])
 
 
-def simulate_iteration(profile: HierProfile, net: Network, sched: Schedule,
-                       origin: str = "device") -> float:
-    """Makespan (seconds) of one training iteration under `sched`."""
+def _simulate_iteration(profile: HierProfile, net: Network, sched: Schedule,
+                        origin: str = "device") -> float:
+    """Makespan (seconds) of one training iteration under `sched` on the
+    canonical three-worker DES (``Plan.simulate`` for triple fleets)."""
     des = Des()
     _add_iteration(des, profile, net, sched, origin)
     return des.run()
 
 
+def simulate_iteration(profile: HierProfile, net: Network, sched: Schedule,
+                       origin: str = "device") -> float:
+    """Deprecated: use ``repro.api.plan(...).simulate()`` (same DES)."""
+    from repro.core._deprecation import warn_deprecated
+    warn_deprecated("repro.core.simulator.simulate_iteration()",
+                    "repro.api.plan(model, fleet, B).simulate()")
+    return _simulate_iteration(profile, net, sched, origin)
+
+
 def simulate_iteration_multi(profile: MultiProfile, net: StarNetwork,
                              sched: MultiSchedule) -> float:
-    """Makespan (seconds) of one M-device iteration under ``sched``.
+    """Deprecated: use ``repro.api.plan(...).simulate()`` (same DES)."""
+    from repro.core._deprecation import warn_deprecated
+    warn_deprecated("repro.core.simulator.simulate_iteration_multi()",
+                    "repro.api.plan(model, fleet, B).simulate()")
+    return _simulate_iteration_multi(profile, net, sched)
 
-    Mirrors :func:`simulate_iteration` on the star topology: one compute
+
+def _simulate_iteration_multi(profile: MultiProfile, net: StarNetwork,
+                              sched: MultiSchedule) -> float:
+    """Makespan (seconds) of one M-device iteration under ``sched`` on the
+    star DES (``Plan.simulate`` for star fleets).
+
+    Mirrors :func:`_simulate_iteration` on the star topology: one compute
     resource per worker, one shaped pipe per worker pair (each device's
     radio is its own resource, so M uploads to the edge genuinely overlap),
     and edge/cloud-resident tasks ingest their sub-batch as M parallel

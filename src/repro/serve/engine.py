@@ -7,6 +7,11 @@ or recurrent state (SSM/xLSTM), batch sharded over ``(pod, data)``, the
 cache sharded per ``repro.distrib.cache_spec`` (KV heads over ``model``
 when divisible, else sequence-sharded with the LSE combine emerging
 from XLA's sharded-softmax handling).
+
+Surface note (DESIGN.md §9): serving is *inference* and sits outside the
+``Fleet``/``Plan`` training facade — this module is the serving front
+door (``generate`` + the step builders in ``__all__``), and it consumes
+``build_model(LMConfig)`` models directly rather than layer stacks.
 """
 from __future__ import annotations
 
@@ -15,6 +20,9 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+__all__ = ["GenerationResult", "generate", "make_decode_step",
+           "make_prefill_step", "sample_token"]
 
 Tree = Any
 

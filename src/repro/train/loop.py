@@ -124,19 +124,72 @@ def _ema_profile_update(prof, baseline, slow: Dict[str, float],
         del prof._prefix
 
 
-def run_hier_loop(cfg: HierLoopConfig, model, profile, net, data,
-                  worker_slowdown: Optional[Callable[[int], Dict[str, float]]]
-                  = None, log: Optional[Callable[[str], None]] = None
-                  ) -> Dict[str, Any]:
+def _loop_ops(topology: str, model, profile, net, cfg: "HierLoopConfig"):
+    """Topology-native function bundle for :func:`_run_loop`.
+
+    The triple and star loops were line-for-line duplicates differing
+    only in which half of the forked surface they called; this bundle is
+    the collapse point (DESIGN.md §9).  History formats are preserved
+    per topology: the triple records scalar ``m_s`` and a 3-tuple ``b``,
+    the star records the ``m_s`` tuple and an (M+2)-tuple ``b``.
+    """
+    if topology == "triple":
+        from repro.core import scheduler
+        from repro.core.cost_model import WORKERS, _t_total
+        from repro.core.hybrid_step import jitted_hybrid_step, split_batch
+        from repro.core.pipeline import t_period
+
+        return dict(
+            names=WORKERS,
+            widx={w: i for i, w in enumerate(WORKERS)},
+            solve=lambda p: scheduler._solve_3w(p, net, cfg.batch,
+                                                objective=cfg.objective),
+            fill=lambda p, s: _t_total(p, net, s).total,
+            period=lambda p, s: t_period(p, net, s),
+            step_fn=lambda s: jitted_hybrid_step(model, s.m_s, s.m_l,
+                                                 cfg.lr),
+            split=split_batch,
+            hist=lambda s: {"m_s": s.m_s, "m_l": s.m_l,
+                            "b": (s.b_o, s.b_s, s.b_l)},
+            tag="hier",
+        )
+    assert topology == "star", topology
+    from repro.core import scheduler
+    from repro.core.cost_model import _t_total_multi
+    from repro.core.hybrid_step import (jitted_multi_hybrid_step,
+                                        multi_split_batch)
+    from repro.core.pipeline import t_period_multi
+
+    return dict(
+        names=profile.worker_names,
+        widx=profile.widx,
+        solve=lambda p: scheduler._solve_multi(p, net, cfg.batch,
+                                               objective=cfg.objective),
+        fill=lambda p, s: _t_total_multi(p, net, s).total,
+        period=lambda p, s: t_period_multi(p, net, s),
+        step_fn=lambda s: jitted_multi_hybrid_step(model, s.m_s, s.m_l,
+                                                   cfg.lr),
+        split=multi_split_batch,
+        hist=lambda s: {"m_s": s.m_s, "m_l": s.m_l,
+                        "b": (s.b_o, *s.b_s, s.b_l)},
+        tag="multi-hier",
+    )
+
+
+def _run_loop(cfg: HierLoopConfig, model, profile, net, data,
+              worker_slowdown: Optional[Callable[[int], Dict[str, float]]]
+              = None, log: Optional[Callable[[str], None]] = None, *,
+              topology: str, initial_schedule=None) -> Dict[str, Any]:
     """Train any layer stack under the HierTrain schedule, re-solving the
-    schedule online as (simulated) worker speeds drift.
+    schedule online as (simulated) worker speeds drift — the engine
+    behind :meth:`repro.api.Plan.train` for both topologies.
 
     ``model`` is anything :func:`repro.core.layerstack.as_layerstack`
     accepts — a layered CNN or an LM model-zoo adapter
     (:mod:`repro.models.lm.layerstack`); ``data.batch(step)`` must return
     ``{"x", "labels"}`` arrays whose leading axis is the sample axis.
 
-    ``worker_slowdown(step)`` returns per-worker slowdown factors —
+    ``worker_slowdown(step)`` returns per-worker-name slowdown factors —
     the straggler injection used by tests/benchmarks.  Execution is
     simulated with the calibrated cost model for timing and with the
     *real* hybrid JAX step for the numerics.
@@ -144,9 +197,7 @@ def run_hier_loop(cfg: HierLoopConfig, model, profile, net, data,
     Re-scheduling is gated on cadence alone (every ``resched_every``
     steps): each tick EMAs *every* worker toward its observed speed — so
     a straggler that heals decays back to the baseline profile and the
-    loop returns to the pre-straggle schedule (the old gate skipped the
-    tick entirely once ``worker_slowdown`` reported nothing, freezing
-    the degraded schedule forever).
+    loop returns to the pre-straggle schedule.
 
     With ``cfg.pipeline_depth = K > 1`` the wall clock models pipelined
     steady-state execution (DESIGN.md §7): the first step of each
@@ -157,14 +208,14 @@ def run_hier_loop(cfg: HierLoopConfig, model, profile, net, data,
     """
     import copy
 
-    from repro.core.cost_model import WORKERS, t_total
-    from repro.core.hybrid_step import jitted_hybrid_step, split_batch
-    from repro.core.pipeline import t_period
-    from repro.core.scheduler import solve
-
+    ops = _loop_ops(topology, model, profile, net, cfg)
+    widx = ops["widx"]
     prof = copy.deepcopy(profile)
-    result = solve(prof, net, cfg.batch, objective=cfg.objective)
-    sched = result.schedule
+    # The solver is a pure function of the profile values, so a caller
+    # that already planned this exact (profile, net, B, objective) —
+    # Plan.train — can seed the loop and skip the duplicate solve.
+    sched = initial_schedule if initial_schedule is not None \
+        else ops["solve"](prof).schedule
     params = model.init(jax.random.PRNGKey(cfg.seed))
     wall = 0.0
     history = []
@@ -174,84 +225,9 @@ def run_hier_loop(cfg: HierLoopConfig, model, profile, net, data,
         slow = worker_slowdown(step) if worker_slowdown else {}
         if worker_slowdown is not None and step > 0 and \
                 step % cfg.resched_every == 0:
-            _ema_profile_update(prof, profile, slow, WORKERS, cfg.ema)
-            sched = solve(prof, net, cfg.batch,
-                          objective=cfg.objective).schedule
+            _ema_profile_update(prof, profile, slow, ops["names"], cfg.ema)
+            sched = ops["solve"](prof).schedule
         # timing from the cost model under the *actual* current speeds
-        true_prof = copy.deepcopy(profile)
-        for w, factor in (slow or {}).items():
-            i = {"device": 0, "edge": 1, "cloud": 2}[w]
-            true_prof.L_f[i] *= factor
-            true_prof.L_b[i] *= factor
-            true_prof.L_u[i] *= factor
-        if hasattr(true_prof, "_prefix"):   # deepcopy carries the cache
-            del true_prof._prefix
-        if cfg.pipeline_depth > 1 and step % cfg.pipeline_depth != 0 \
-                and sched == prev_sched:
-            wall += t_period(true_prof, net, sched)
-        else:   # window head or pipe broken by a re-schedule: pay fill
-            wall += t_total(true_prof, net, sched).total
-        b = data.batch(step)
-        # Cached compiled step: static (m_s, m_l, lr), donated params — a
-        # reschedule that keeps the cuts reuses the same executable.
-        step_fn = jitted_hybrid_step(model, sched.m_s, sched.m_l, cfg.lr)
-        params, loss = step_fn(params, split_batch(
-            jax.numpy.asarray(b["x"]), jax.numpy.asarray(b["labels"]),
-            sched))
-        losses.append(float(loss))
-        if log and (step + 1) % 10 == 0:
-            log(f"hier step {step+1}: loss={losses[-1]:.4f} "
-                f"sched=({sched.describe()}) wall={wall:.2f}s")
-        history.append({"step": step + 1, "loss": losses[-1],
-                        "wall": wall, "m_s": sched.m_s, "m_l": sched.m_l,
-                        "b": (sched.b_o, sched.b_s, sched.b_l),
-                        "sched": sched})
-    return {"params": params, "history": history, "wall": wall,
-            "final_schedule": sched}
-
-
-def run_multi_hier_loop(cfg: HierLoopConfig, model, profile, net, data,
-                        worker_slowdown: Optional[
-                            Callable[[int], Dict[str, float]]] = None,
-                        log: Optional[Callable[[str], None]] = None
-                        ) -> Dict[str, Any]:
-    """M-device variant of :func:`run_hier_loop` (DESIGN.md §6).
-
-    ``model`` is any layer stack as in :func:`run_hier_loop`;
-    ``profile`` is a :class:`repro.core.cost_model.MultiProfile` and ``net``
-    a :class:`~repro.core.cost_model.StarNetwork`; ``worker_slowdown(step)``
-    maps *worker names* (``device_0``..., ``edge``, ``cloud``) to slowdown
-    factors — straggler devices feed the EMA profile and Algorithm 1
-    re-solves per-device cuts and sample splits online.  Straggler
-    recovery, the cadence-only re-schedule gate, and the
-    ``pipeline_depth``/``objective`` wall-clock semantics match
-    :func:`run_hier_loop`.
-    """
-    import copy
-
-    from repro.core.cost_model import t_total_multi
-    from repro.core.hybrid_step import (jitted_multi_hybrid_step,
-                                        multi_split_batch)
-    from repro.core.pipeline import t_period_multi
-    from repro.core.scheduler import solve_multi
-
-    widx = profile.widx
-    prof = copy.deepcopy(profile)
-    result = solve_multi(prof, net, cfg.batch, objective=cfg.objective)
-    sched = result.schedule
-    params = model.init(jax.random.PRNGKey(cfg.seed))
-    wall = 0.0
-    history = []
-    losses = []
-    for step in range(cfg.total_steps):
-        prev_sched = sched
-        slow = worker_slowdown(step) if worker_slowdown else {}
-        if worker_slowdown is not None and step > 0 and \
-                step % cfg.resched_every == 0:
-            _ema_profile_update(prof, profile, slow, profile.worker_names,
-                                cfg.ema)
-            sched = solve_multi(prof, net, cfg.batch,
-                                objective=cfg.objective).schedule
         true_prof = copy.deepcopy(profile)
         for w, factor in (slow or {}).items():
             i = widx[w]
@@ -262,22 +238,65 @@ def run_multi_hier_loop(cfg: HierLoopConfig, model, profile, net, data,
             del true_prof._prefix
         if cfg.pipeline_depth > 1 and step % cfg.pipeline_depth != 0 \
                 and sched == prev_sched:
-            wall += t_period_multi(true_prof, net, sched)
+            wall += ops["period"](true_prof, sched)
         else:   # window head or pipe broken by a re-schedule: pay fill
-            wall += t_total_multi(true_prof, net, sched).total
+            wall += ops["fill"](true_prof, sched)
         b = data.batch(step)
-        step_fn = jitted_multi_hybrid_step(model, sched.m_s, sched.m_l,
-                                           cfg.lr)
-        params, loss = step_fn(params, multi_split_batch(
+        # Cached compiled step: static (m_s, m_l, lr), donated params — a
+        # reschedule that keeps the cuts reuses the same executable.
+        step_fn = ops["step_fn"](sched)
+        params, loss = step_fn(params, ops["split"](
             jax.numpy.asarray(b["x"]), jax.numpy.asarray(b["labels"]),
             sched))
         losses.append(float(loss))
         if log and (step + 1) % 10 == 0:
-            log(f"multi-hier step {step+1}: loss={losses[-1]:.4f} "
+            log(f"{ops['tag']} step {step+1}: loss={losses[-1]:.4f} "
                 f"sched=({sched.describe()}) wall={wall:.2f}s")
         history.append({"step": step + 1, "loss": losses[-1],
-                        "wall": wall, "m_s": sched.m_s, "m_l": sched.m_l,
-                        "b": (sched.b_o, *sched.b_s, sched.b_l),
+                        "wall": wall, **ops["hist"](sched),
                         "sched": sched})
     return {"params": params, "history": history, "wall": wall,
             "final_schedule": sched}
+
+
+def run_hier_loop(cfg: HierLoopConfig, model, profile, net, data,
+                  worker_slowdown: Optional[Callable[[int], Dict[str, float]]]
+                  = None, log: Optional[Callable[[str], None]] = None
+                  ) -> Dict[str, Any]:
+    """Deprecated shim over the facade: ``repro.api.plan(model,
+    Fleet.from_profile(profile, net), B).train(data, ...)``.  Results —
+    trained params, history, wall clock — are bit-identical to the
+    historical three-worker loop."""
+    from repro.core._deprecation import warn_deprecated
+    warn_deprecated(
+        "repro.train.loop.run_hier_loop()",
+        "repro.api.plan(model, Fleet.from_profile(profile, net), "
+        "B).train(data, steps=...)")
+    from repro import api
+    p = api.plan(model, api.Fleet.from_profile(profile, net), cfg.batch,
+                 objective=cfg.objective,
+                 pipeline_depth=cfg.pipeline_depth)
+    return p.train(data, steps=cfg.total_steps, lr=cfg.lr,
+                   resched_every=cfg.resched_every, ema=cfg.ema,
+                   seed=cfg.seed, worker_slowdown=worker_slowdown, log=log)
+
+
+def run_multi_hier_loop(cfg: HierLoopConfig, model, profile, net, data,
+                        worker_slowdown: Optional[
+                            Callable[[int], Dict[str, float]]] = None,
+                        log: Optional[Callable[[str], None]] = None
+                        ) -> Dict[str, Any]:
+    """Deprecated shim over the facade (M-device variant): see
+    :func:`run_hier_loop`."""
+    from repro.core._deprecation import warn_deprecated
+    warn_deprecated(
+        "repro.train.loop.run_multi_hier_loop()",
+        "repro.api.plan(model, Fleet.from_profile(profile, net), "
+        "B).train(data, steps=...)")
+    from repro import api
+    p = api.plan(model, api.Fleet.from_profile(profile, net), cfg.batch,
+                 objective=cfg.objective,
+                 pipeline_depth=cfg.pipeline_depth)
+    return p.train(data, steps=cfg.total_steps, lr=cfg.lr,
+                   resched_every=cfg.resched_every, ema=cfg.ema,
+                   seed=cfg.seed, worker_slowdown=worker_slowdown, log=log)
