@@ -1,0 +1,208 @@
+"""Elastic-fleet churn benchmark (beyond the paper — DESIGN.md §10).
+
+The paper schedules a *static* fleet; this benchmark drives the
+hierarchical trainer through a deterministic Poisson join/leave/crash/
+link-fade trace on the heterogeneous M-device star fleet (M ∈ {2, 4, 8})
+and measures what elasticity costs and what the warm-started re-solve
+buys:
+
+* **recovery** — simulated seconds lost to crashes (the in-flight fill
+  the survivors re-run) plus the wall-clock overhead of the elastic run
+  against an *oracle static* fleet that keeps the initial membership and
+  never churns,
+* **warm vs cold re-solve** — at every membership change the live
+  schedule is remapped onto the survivors and fed to the dominance
+  prune as a warm incumbent; the same membership is also solved cold,
+  checking the schedules are bit-identical (the ``_warm_ok``
+  certificate) and recording the measured solver seconds and prune
+  counts for both,
+* **crash-safe resume** — the elastic run is killed mid-flight via
+  ``fail_at`` and resumed from its checkpoint; the resumed tail must be
+  bitwise equal to the uninterrupted run (params and history), and the
+  measured resume seconds are recorded.
+
+``python -m benchmarks.fig_churn`` prints the tables;
+``benchmarks/run.py --json`` folds :func:`run_json` into
+``BENCH_sched.json`` under the ``churn`` key (deterministic fields —
+traces, schedules, prune counts, simulated walls — are covered by the
+``--check-schedules`` CI drift check; measured seconds are not).
+"""
+from __future__ import annotations
+
+import copy
+import tempfile
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks.common import cnn_model, table, table2_fleet
+from repro.api import Fleet, plan
+from repro.core.churn import (apply_event, poisson_trace, reference_rows,
+                              remap_schedule)
+from repro.data.pipeline import SyntheticImages
+
+SWEEP_M = (2, 4, 8)
+EDGE_CLOUD_MBPS = 3.0
+MODEL = "lenet5"
+B = 128
+STEPS = 30
+FAIL_AT = 17
+CKPT_EVERY = 5
+# Rates tuned so every M sees a handful of events inside STEPS steps.
+RATES = dict(join_rate=0.08, leave_rate=0.06, crash_rate=0.05,
+             degrade_rate=0.08)
+
+
+def _star_fleet(m: int) -> Fleet:
+    spec = table2_fleet(MODEL, EDGE_CLOUD_MBPS, m=m, topology="star")
+    model = cnn_model(MODEL)
+    return Fleet.from_profile(spec.profile_for(model), spec.network())
+
+
+def _replay_resolves(prof, net, trace, sched0) -> List[Dict]:
+    """Re-play the trace's membership changes outside the loop, timing
+    the warm-started re-solve against a cold solve of the identical
+    membership and checking the argmin is bit-identical."""
+    from repro.core.scheduler import _solve_multi
+    prof = copy.deepcopy(prof)
+    base = copy.deepcopy(prof)
+    ref = reference_rows(base)
+    sched = sched0
+    out: List[Dict] = []
+    steps = sorted({e.step for e in trace.events})
+    for step in steps:
+        for ev in trace.events_at(step):
+            prof, base, net, _ = apply_event(prof, base, net, ref, ev)
+        warm = remap_schedule(sched, prof)
+        t0 = time.perf_counter()
+        ws = _solve_multi(prof, net, B, warm_start=warm)
+        warm_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        cold = _solve_multi(prof, net, B)
+        cold_s = time.perf_counter() - t0
+        sched = ws.schedule
+        out.append({
+            "step": step,
+            "m": len(prof.worker_names) - 2,
+            "warm": warm is not None,
+            "candidates": cold.n_candidates,
+            "pruned_warm": ws.n_pruned,
+            "pruned_cold": cold.n_pruned,
+            "equal": bool(ws.schedule == cold.schedule),
+            "schedule": ws.schedule.describe(),
+            "warm_s": warm_s,
+            "cold_s": cold_s,
+        })
+    return out
+
+
+def measure() -> Dict[str, List[Dict]]:
+    rows: List[Dict] = []
+    resume_rows: List[Dict] = []
+    model = cnn_model(MODEL)
+    for m in SWEEP_M:
+        fleet = _star_fleet(m)
+        prof, net = fleet.profile_for(model), fleet.network()
+        data = SyntheticImages(model.input_shape, model.num_classes, B,
+                               seed=0)
+        trace = poisson_trace(prof.worker_names[:-2], STEPS, seed=m,
+                              **RATES)
+        p = plan(model, fleet, B)
+        sched0 = p.schedule
+
+        t0 = time.perf_counter()
+        elastic = plan(model, fleet, B).train(data, steps=STEPS, seed=0,
+                                              churn=trace)
+        train_s = time.perf_counter() - t0
+        static = plan(model, fleet, B).train(data, steps=STEPS, seed=0)
+
+        resolves = _replay_resolves(prof, net, trace, sched0)
+        warm_s = sum(r["warm_s"] for r in resolves)
+        cold_s = sum(r["cold_s"] for r in resolves)
+        rows.append({
+            "M": m,
+            "steps": STEPS,
+            "n_events": len(trace.events),
+            "events": [f"{type(e).__name__}:{e.name}@{e.step}"
+                       for e in trace.events],
+            "schedule_initial": sched0.describe(),
+            "schedule_final": elastic["final_schedule"].describe(),
+            "warm_equals_cold": all(r["equal"] for r in resolves),
+            "resolves": [{k: r[k] for k in
+                          ("step", "m", "warm", "candidates",
+                           "pruned_warm", "pruned_cold", "schedule")}
+                         for r in resolves],
+            "lps_pruned_warm": sum(r["pruned_warm"] for r in resolves),
+            "lps_pruned_cold": sum(r["pruned_cold"] for r in resolves),
+            # simulated clocks: deterministic, drift-checked
+            "wall_elastic": float(elastic["wall"]),
+            "wall_static": float(static["wall"]),
+            "recovery_s": float(sum(c["lost_s"]
+                                    for c in elastic["churn_log"])),
+            "loss_elastic": elastic["history"][-1]["loss"],
+            "loss_static": static["history"][-1]["loss"],
+            # measured seconds: tracked, never drift-checked
+            "train_s": train_s,
+            "warm_solve_s": warm_s,
+            "cold_solve_s": cold_s,
+            "warm_speedup": cold_s / warm_s if warm_s > 0 else 1.0,
+        })
+
+        # crash-safe resume on the same elastic run
+        with tempfile.TemporaryDirectory() as d:
+            from repro.train.loop import InjectedFailure
+            try:
+                plan(model, fleet, B).train(
+                    data, steps=STEPS, seed=0, churn=trace, ckpt_dir=d,
+                    ckpt_every=CKPT_EVERY, fail_at=FAIL_AT)
+                raise AssertionError("fail_at never fired")
+            except InjectedFailure:
+                pass
+            t0 = time.perf_counter()
+            resumed = plan(model, fleet, B).train(
+                data, steps=STEPS, seed=0, churn=trace, ckpt_dir=d,
+                ckpt_every=CKPT_EVERY)
+            resume_s = time.perf_counter() - t0
+        bitwise = bool(all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree.leaves(elastic["params"]),
+                            jax.tree.leaves(resumed["params"])))
+            and resumed["wall"] == elastic["wall"])
+        resume_rows.append({
+            "M": m,
+            "fail_at": FAIL_AT,
+            "resumed_from": resumed["resumed_from"],
+            "bitwise_equal": bitwise,
+            "resume_s": resume_s,
+        })
+    return {"rows": rows, "resume": resume_rows}
+
+
+def run() -> str:
+    out = measure()
+    main = table(
+        out["rows"],
+        ["M", "n_events", "recovery_s", "wall_elastic", "wall_static",
+         "lps_pruned_warm", "lps_pruned_cold", "warm_solve_s",
+         "cold_solve_s", "warm_speedup", "warm_equals_cold"],
+        f"Elastic-fleet churn — {MODEL}, B={B}, {STEPS} steps, Poisson "
+        f"join/leave/crash/fade, heterogeneous fleet")
+    res = table(out["resume"],
+                ["M", "fail_at", "resumed_from", "bitwise_equal",
+                 "resume_s"],
+                "Kill/resume from checkpoint (bitwise-equal tail)")
+    ev_lines = "\n".join(
+        f"  M={r['M']}: {', '.join(r['events'])}" for r in out["rows"])
+    return f"{main}\n\ntraces:\n{ev_lines}\n\n{res}"
+
+
+def run_json() -> Dict[str, List[Dict]]:
+    """The ``churn`` section of ``BENCH_sched.json``: ``rows`` (per-M
+    elastic runs) and ``resume`` (kill/resume checks)."""
+    return measure()
+
+
+if __name__ == "__main__":
+    print(run())

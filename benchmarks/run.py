@@ -5,8 +5,9 @@ roofline report if dry-run results exist.  ``python -m benchmarks.run``.
 section it re-times the Table II scheduler search with both backends
 (reference scalar simplex vs batched engine) plus the M-device sweep
 (``benchmarks/fig_multidevice``), the pipelined steady-state sweep
-(``benchmarks/fig_pipeline``) and the LM-fleet LayerStack sweep
-(``benchmarks/fig_lm_fleet``), and writes runtimes, speedups, periods and
+(``benchmarks/fig_pipeline``), the LM-fleet LayerStack sweep
+(``benchmarks/fig_lm_fleet``) and the elastic-fleet churn benchmark
+(``benchmarks/fig_churn``), and writes runtimes, speedups, periods and
 the chosen schedules to ``BENCH_sched.json`` (or PATH), so the
 scheduler-engine perf trajectory is tracked across PRs.  Every record is
 stamped with the git SHA (``+dirty`` when regenerated before the commit it
@@ -48,14 +49,20 @@ _DET_KEYS = {
                  "period_gain", "speedup_all_edge", "speedup_all_cloud",
                  "lps_solved", "candidates", "pruned", "schedule_lat",
                  "schedule_thr"),
+    "churn.rows": ("M", "steps", "n_events", "events",
+                   "schedule_initial", "schedule_final",
+                   "warm_equals_cold", "resolves", "lps_pruned_warm",
+                   "lps_pruned_cold", "wall_elastic", "wall_static",
+                   "recovery_s", "loss_elastic", "loss_static"),
+    "churn.resume": ("M", "fail_at", "resumed_from", "bitwise_equal"),
 }
 
 
 def run_sections() -> int:
     from benchmarks import (fig6_model_validity, fig7_8_speedup,
-                            fig9_10_sota, fig11_edge_cpu, fig_lm_fleet,
-                            fig_multidevice, fig_pipeline, roofline_report,
-                            table2_sched_runtime)
+                            fig9_10_sota, fig11_edge_cpu, fig_churn,
+                            fig_lm_fleet, fig_multidevice, fig_pipeline,
+                            roofline_report, table2_sched_runtime)
     sections = [
         ("Fig.6 model validity", fig6_model_validity.run),
         ("Fig.7/8 vs All-Edge/All-Cloud", fig7_8_speedup.run),
@@ -65,6 +72,7 @@ def run_sections() -> int:
         ("M-device sweep (beyond the paper)", fig_multidevice.run),
         ("Pipelined steady state (T_period)", fig_pipeline.run),
         ("LM fleet via LayerStack (beyond the paper)", fig_lm_fleet.run),
+        ("Elastic fleet churn (beyond the paper)", fig_churn.run),
         ("Roofline report (from dry-run)", roofline_report.run),
     ]
     failures = 0
@@ -83,12 +91,13 @@ def run_sections() -> int:
 
 
 def _build_payload(include_reference: bool = True) -> dict:
-    from benchmarks import fig_lm_fleet, fig_multidevice, fig_pipeline, \
-        table2_sched_runtime
+    from benchmarks import fig_churn, fig_lm_fleet, fig_multidevice, \
+        fig_pipeline, table2_sched_runtime
     payload = table2_sched_runtime.run_json(include_reference)
     payload["multidevice"] = fig_multidevice.run_json()
     payload["pipeline"] = fig_pipeline.run_json()
     payload["lm_fleet"] = fig_lm_fleet.run_json()
+    payload["churn"] = fig_churn.run_json()
     return payload
 
 
@@ -121,6 +130,15 @@ def run_sched_json(path: str) -> int:
               f"(sim err {r['sim_rel_err']:.1%}) vs all-edge "
               f"{r['speedup_all_edge']:.2f}x / all-cloud "
               f"{r['speedup_all_cloud']:.2f}x")
+    for r in payload["churn"]["rows"]:
+        print(f"  churn M={r['M']}: {r['n_events']} events, recovery "
+              f"{r['recovery_s']:.2f}s, warm/cold prune "
+              f"{r['lps_pruned_warm']}/{r['lps_pruned_cold']}, "
+              f"warm==cold {r['warm_equals_cold']}")
+    for r in payload["churn"]["resume"]:
+        print(f"  resume M={r['M']}: from step {r['resumed_from']}, "
+              f"bitwise {r['bitwise_equal']} "
+              f"({r['resume_s']:.1f}s)")
     return 0
 
 
@@ -154,6 +172,10 @@ def check_schedules(path: str) -> int:
         "pipeline.fleet": (committed.get("pipeline", {}).get("fleet", []),
                            fresh["pipeline"]["fleet"]),
         "lm_fleet": (committed.get("lm_fleet", []), fresh["lm_fleet"]),
+        "churn.rows": (committed.get("churn", {}).get("rows", []),
+                       fresh["churn"]["rows"]),
+        "churn.resume": (committed.get("churn", {}).get("resume", []),
+                         fresh["churn"]["resume"]),
     }
     drift = 0
     for name, (old, new) in sections.items():

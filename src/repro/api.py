@@ -184,23 +184,37 @@ class Plan:
               resched_every: int = 20, ema: float = 0.3, seed: int = 0,
               worker_slowdown: Optional[Callable[[int], Dict[str, float]]]
               = None,
-              log: Optional[Callable[[str], None]] = None
-              ) -> Dict[str, Any]:
+              log: Optional[Callable[[str], None]] = None, *,
+              churn=None, ckpt_dir: Optional[str] = None,
+              ckpt_every: int = 50, keep: int = 3,
+              fail_at: Optional[int] = None) -> Dict[str, Any]:
         """Straggler-aware HierTrain loop: real hybrid JAX steps for the
         numerics, the calibrated cost model for the wall clock, online
         EMA re-profiling + re-scheduling every ``resched_every`` steps,
         and pipelined fill+period accounting when the plan was built with
         ``pipeline_depth > 1``.  Returns ``{params, history, wall,
-        final_schedule}``."""
+        final_schedule, resumed_from, churn_log}``.
+
+        ``churn`` — a :class:`repro.core.churn.ChurnTrace` of membership
+        events for elastic star fleets (DESIGN.md §10); raises on
+        ``topology="triple"``.  ``ckpt_dir``/``ckpt_every``/``keep``
+        enable atomic keep-N checkpointing and crash-safe resume: rerun
+        the same call after a crash and the loop restores the newest
+        checkpoint and continues, bitwise equal to an uninterrupted run.
+        ``fail_at`` injects a failure after that step (testing).  All
+        four default off — the loop is then bit-identical to its
+        pre-elastic behaviour."""
         from repro.train.loop import HierLoopConfig, _run_loop
         cfg = HierLoopConfig(
             total_steps=steps, batch=self.B, lr=lr,
             resched_every=resched_every, ema=ema, seed=seed,
-            pipeline_depth=self.pipeline_depth, objective=self.objective)
+            pipeline_depth=self.pipeline_depth, objective=self.objective,
+            ckpt_dir=ckpt_dir, ckpt_every=ckpt_every, keep=keep,
+            fail_at=fail_at)
         return _run_loop(cfg, self._require_model(), self.profile,
                          self.network, data, worker_slowdown, log,
                          topology=self.fleet.topology,
-                         initial_schedule=self.schedule)
+                         initial_schedule=self.schedule, churn=churn)
 
     # ---- reporting ------------------------------------------------------
 
@@ -250,7 +264,9 @@ class Plan:
 def plan(model, fleet: Fleet, B: int, *, objective: str = "latency",
          pipeline_depth: int = 1, backend: str = "batched",
          prune: bool = True, refine_passes: int = 4,
-         keep_log: bool = False) -> Plan:
+         keep_log: bool = False,
+         warm_start: Optional[Union[Schedule, MultiSchedule]] = None
+         ) -> Plan:
     """Solve Algorithm 1 for ``(model, fleet, B)`` and return a
     :class:`Plan`.
 
@@ -261,7 +277,10 @@ def plan(model, fleet: Fleet, B: int, *, objective: str = "latency",
     ``"throughput"`` (steady-state period, DESIGN.md §7);
     ``pipeline_depth`` records how many minibatches ``Plan.train`` keeps
     in flight.  ``backend``/``prune``/``refine_passes``/``keep_log`` are
-    forwarded to the topology-native engine.
+    forwarded to the topology-native engine.  ``warm_start`` (a feasible
+    topology-native schedule, e.g. the live one before a fleet change)
+    tightens the dominance prune without changing the result
+    (DESIGN.md §10).
     """
     if pipeline_depth < 1:
         raise ValueError("pipeline_depth must be >= 1")
@@ -271,11 +290,12 @@ def plan(model, fleet: Fleet, B: int, *, objective: str = "latency",
     if fleet.topology == TRIPLE:
         result = _scheduler._solve_3w(
             profile, net, B, keep_log=keep_log, backend=backend,
-            prune=prune, objective=objective)
+            prune=prune, objective=objective, warm_start=warm_start)
     else:
         result = _scheduler._solve_multi(
             profile, net, B, keep_log=keep_log, backend=backend,
-            prune=prune, refine_passes=refine_passes, objective=objective)
+            prune=prune, refine_passes=refine_passes, objective=objective,
+            warm_start=warm_start)
     return Plan(fleet=fleet, B=B, objective=objective,
                 pipeline_depth=pipeline_depth, backend=backend,
                 profile=profile, network=net, result=result, model=stack)

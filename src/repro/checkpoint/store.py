@@ -17,6 +17,14 @@ single-host here with the same protocol):
 * **Self-describing manifest** — tree structure, dtypes, shapes, step,
   and a payload checksum; loads verify structure before touching the
   model.
+* **Stray-entry tolerance** — only names matching ``step_\\d{8}`` are
+  checkpoints; lock files, notes, or foreign directories in the store
+  are ignored by :func:`latest_step` and the keep-N GC instead of
+  crashing the run.
+* **Corrupt-newest fallback** — :meth:`CheckpointManager.restore_latest`
+  skips an unreadable newest step (torn payload, missing manifest) with
+  a warning and restores the previous one; a restart after a crash that
+  damaged the newest checkpoint still comes back up.
 """
 from __future__ import annotations
 
@@ -24,14 +32,42 @@ import dataclasses
 import hashlib
 import json
 import os
+import re
 import shutil
-from typing import Any, Dict, List, Optional
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Tuple
+from zipfile import BadZipFile as zipfile_BadZipFile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 Params = Any
+
+# Checkpoint dirs are exactly ``step_<8+ digits>``; anything else in the
+# store (lock files, ``step_notes.txt``, foreign dirs) is not ours.
+_STEP_RE = re.compile(r"step_(\d{8,})")
+
+
+def _step_of(name: str) -> Optional[int]:
+    m = _STEP_RE.fullmatch(name)
+    return int(m.group(1)) if m else None
+
+
+def _list_steps(directory: str) -> List[int]:
+    if not os.path.isdir(directory):
+        return []
+    steps = [_step_of(d) for d in os.listdir(directory)]
+    return sorted(s for s in steps if s is not None)
+
+
+def _fsync_dir(path: str) -> None:
+    """fsync a directory so its entries (renames, new files) are durable."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _flatten(tree: Params):
@@ -70,7 +106,10 @@ def save_checkpoint(directory: str, step: int, tree: Params,
         else:
             dtypes[name] = str(arr.dtype)
     payload = os.path.join(tmp, "arrays.npz")
-    np.savez(payload, **arrays)
+    with open(payload, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
     with open(payload, "rb") as f:
         digest = hashlib.sha256(f.read()).hexdigest()
 
@@ -88,16 +127,29 @@ def save_checkpoint(directory: str, step: int, tree: Params,
         json.dump(manifest, f)
         f.flush()
         os.fsync(f.fileno())
+    # Durability order: payload + manifest fsynced above, then the tmp
+    # dir (so both entries survive), then the rename, then the parent
+    # dir (so the rename itself survives).
+    _fsync_dir(tmp)
     os.rename(tmp, final)
+    _fsync_dir(directory)
     return final
 
 
 def latest_step(directory: str) -> Optional[int]:
-    if not os.path.isdir(directory):
-        return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
-             if d.startswith("step_") and not d.endswith(".tmp")]
-    return max(steps) if steps else None
+    steps = _list_steps(directory)
+    return steps[-1] if steps else None
+
+
+def read_extra(directory: str, step: int) -> Dict[str, Any]:
+    """Read only the manifest's ``extra`` dict (cheap, no arrays).
+
+    Two-phase restore: the extra carries JSON metadata (fleet
+    membership, schedule, RNG seed, ...) that callers may need to
+    reconstruct the ``like`` tree before loading the arrays."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f).get("extra", {})
 
 
 def load_checkpoint(directory: str, step: int, like: Params,
@@ -134,7 +186,12 @@ def load_checkpoint(directory: str, step: int, like: Params,
         if shard is not None:
             out.append(jax.device_put(arr, shard))
         else:
-            out.append(jnp.asarray(arr))
+            x = jnp.asarray(arr)
+            # With x64 disabled jnp silently downcasts f64/i64 leaves; a
+            # checkpoint must restore exactly what was saved (the hier
+            # loop's profile rows are float64), so keep such leaves as
+            # host numpy arrays.
+            out.append(arr if x.dtype != arr.dtype else x)
     return jax.tree.unflatten(treedef, out)
 
 
@@ -151,14 +208,40 @@ class CheckpointManager:
 
     def restore_latest(self, like: Params, shardings: Optional[Params] = None
                        ):
-        step = latest_step(self.directory)
-        if step is None:
-            return None, None
-        return step, load_checkpoint(self.directory, step, like, shardings)
+        return self.restore_latest_with(lambda step, extra: like,
+                                        shardings)[:2]
+
+    def restore_latest_with(self, like_fn: Callable[[int, Dict[str, Any]],
+                                                    Params],
+                            shardings: Optional[Params] = None,
+                            ) -> Tuple[Optional[int], Optional[Params],
+                                       Optional[Dict[str, Any]]]:
+        """Restore the newest readable step, building the target tree
+        from its manifest extra via ``like_fn(step, extra)``.
+
+        A corrupt or torn newest step (crash while the durability
+        protocol was mid-flight on a non-ordering filesystem, disk
+        damage, ...) is skipped with a warning and the previous step is
+        tried; the last error is raised only if *every* step is
+        unreadable."""
+        steps = _list_steps(self.directory)
+        last_err: Optional[BaseException] = None
+        for step in reversed(steps):
+            try:
+                extra = read_extra(self.directory, step)
+                like = like_fn(step, extra)
+                tree = load_checkpoint(self.directory, step, like, shardings)
+                return step, tree, extra
+            except (OSError, ValueError, KeyError, zipfile_BadZipFile) as e:
+                warnings.warn(
+                    f"checkpoint step {step} in {self.directory} is "
+                    f"unreadable ({type(e).__name__}: {e}); falling back "
+                    f"to the previous step", RuntimeWarning, stacklevel=2)
+                last_err = e
+        if last_err is not None:
+            raise last_err
+        return None, None, None
 
     def _gc(self) -> None:
-        steps = sorted(
-            int(d.split("_")[1]) for d in os.listdir(self.directory)
-            if d.startswith("step_") and not d.endswith(".tmp"))
-        for s in steps[:-self.keep]:
+        for s in _list_steps(self.directory)[:-self.keep]:
             shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"))

@@ -373,6 +373,59 @@ class MultiProfile:
                            MO=self.MO, sample_bytes=self.sample_bytes,
                            MG=self.MG)
 
+    # ---- membership edits (elastic fleets, DESIGN.md §10) ---------------
+    # All return NEW profiles (rows are copied, the per-layer columns are
+    # shared); the prefix cache is never inherited, so downstream costs
+    # always see the edited membership.
+
+    def device_index(self, name: str) -> int:
+        """Index of device ``name`` (raises on edge/cloud or unknown)."""
+        if name not in self.device_names:
+            raise ValueError(f"{name!r} is not a device of this fleet "
+                             f"(devices: {self.device_names})")
+        return self.widx[name]
+
+    def drop_device(self, name: str) -> "MultiProfile":
+        """Membership edit: remove device ``name`` (a leave or crash).
+
+        The surviving rows are byte-identical to the original profile's,
+        so every cost of the edited fleet equals a fresh fleet built from
+        the survivors bit-for-bit."""
+        i = self.device_index(name)
+        if self.num_devices < 2:
+            raise ValueError("cannot drop the last device of the fleet")
+        keep = [j for j in range(self.num_workers) if j != i]
+        return MultiProfile(
+            layer_names=self.layer_names,
+            worker_names=tuple(self.worker_names[j] for j in keep),
+            L_f=self.L_f[keep].copy(), L_b=self.L_b[keep].copy(),
+            L_u=self.L_u[keep].copy(), MP=self.MP, MO=self.MO,
+            sample_bytes=self.sample_bytes, MG=self.MG)
+
+    def add_device(self, name: str, L_f_row, L_b_row,
+                   L_u_row) -> "MultiProfile":
+        """Membership edit: append device ``name`` after the existing
+        devices with the given per-layer second rows (seeded from the
+        joiner's :class:`~repro.core.profiler.WorkerSpec` tier by
+        :func:`repro.core.churn.apply_event`; the online EMA refines it
+        from the first straggler report onward)."""
+        if name in self.worker_names:
+            raise ValueError(f"worker {name!r} already in the fleet")
+        m = self.num_devices
+
+        def ins(a: np.ndarray, row) -> np.ndarray:
+            row = np.asarray(row, np.float64).reshape(1, -1)
+            assert row.shape[1] == self.num_layers
+            return np.concatenate([a[:m], row, a[m:]], axis=0)
+
+        return MultiProfile(
+            layer_names=self.layer_names,
+            worker_names=self.worker_names[:m] + (name,) +
+            self.worker_names[m:],
+            L_f=ins(self.L_f, L_f_row), L_b=ins(self.L_b, L_b_row),
+            L_u=ins(self.L_u, L_u_row), MP=self.MP, MO=self.MO,
+            sample_bytes=self.sample_bytes, MG=self.MG)
+
 
 @dataclasses.dataclass
 class StarNetwork:
@@ -416,6 +469,35 @@ class StarNetwork:
         dd[np.diag_indices(m)] = np.inf
         bwm[:m, :m] = dd
         return bwm
+
+    # ---- membership edits (elastic fleets, DESIGN.md §10) ---------------
+
+    def drop_device(self, i: int) -> "StarNetwork":
+        """Remove device ``i``'s uplink (paired with
+        :meth:`MultiProfile.drop_device`)."""
+        if not 0 <= i < self.num_devices:
+            raise ValueError(f"no device {i} in a {self.num_devices}-device "
+                             "star")
+        if self.num_devices < 2:
+            raise ValueError("cannot drop the last device of the fleet")
+        return StarNetwork(bw_de=np.delete(self.bw_de, i), bw_ec=self.bw_ec)
+
+    def add_device(self, bw: float) -> "StarNetwork":
+        """Append a device uplink of ``bw`` bytes/s."""
+        return StarNetwork(bw_de=np.concatenate([self.bw_de, [bw]]),
+                           bw_ec=self.bw_ec)
+
+    def scale_uplink(self, i: int, factor: float) -> "StarNetwork":
+        """Multiply device ``i``'s uplink by ``factor`` (a
+        :class:`~repro.core.churn.LinkDegrade`; ``factor > 1`` heals)."""
+        if not 0 <= i < self.num_devices:
+            raise ValueError(f"no device {i} in a {self.num_devices}-device "
+                             "star")
+        if factor <= 0:
+            raise ValueError("uplink scale factor must be positive")
+        bw = self.bw_de.copy()
+        bw[i] *= factor
+        return StarNetwork(bw_de=bw, bw_ec=self.bw_ec)
 
     def upload_bw(self) -> np.ndarray:
         """``[M+2]`` effective ingest bandwidth for a worker receiving its

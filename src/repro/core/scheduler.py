@@ -326,10 +326,25 @@ def _build_lp_stack(profile: HierProfile, net: Network, o_idx: np.ndarray,
     return A_ub, b_ub, A_eq, b_eq
 
 
+def _warm_ok(totals_win: float, incumbent: float) -> bool:
+    """Soundness certificate for a warm-started prune (DESIGN.md §10).
+
+    The prune drops lanes with ``const_lb > incumbent``.  If the best
+    *surviving* exact score is ``<= incumbent``, then (a) every pruned
+    lane scores strictly above it (``score >= const_lb > incumbent``),
+    so the cold argmin lane survived, and (b) the order-preserving mask
+    kept it the first minimum — the warm result is bit-identical to the
+    cold one.  If instead every survivor scores above the incumbent (the
+    warm schedule beat the whole surviving grid), a pruned lane could
+    have been the cold winner and the caller must re-solve cold.
+    """
+    return totals_win <= incumbent
+
+
 def _solve_batched(profile: HierProfile, net: Network, B: int, origin: str,
                    workers: Tuple[str, ...], keep_log: bool,
-                   prune: bool, objective: str = "latency"
-                   ) -> SchedulerResult:
+                   prune: bool, objective: str = "latency",
+                   warm_start: Optional[Schedule] = None) -> SchedulerResult:
     N = profile.num_layers
     p = profile.prefix()
     F, Bk, U = p["F"], p["Bk"], p["U"]
@@ -353,6 +368,7 @@ def _solve_batched(profile: HierProfile, net: Network, B: int, origin: str,
     # under objective="throughput" (scored against the period incumbent).
     keep = np.ones(K, bool)
     n_pruned = 0
+    incumbent = np.inf
     if prune:
         Bf = float(B)
         const_lb = Bf * (F[o_idx, N] - F[o_idx, ml]) + \
@@ -363,6 +379,16 @@ def _solve_batched(profile: HierProfile, net: Network, B: int, origin: str,
         incumbent = score_batch(o_idx[trivial], s_idx[trivial],
                                 l_idx[trivial], ms[trivial], ml[trivial],
                                 b_triv).min()
+        if warm_start is not None:
+            # Warm incumbent: the live schedule's exact cost on this
+            # fleet (the incremental re-solve of DESIGN.md §10).
+            if warm_start.batch != B:
+                raise ValueError(
+                    f"warm_start batch {warm_start.batch} != B {B}")
+            ws_score = _t_total(profile, net, warm_start, origin).total \
+                if objective == "latency" else \
+                pipeline_mod.t_period(profile, net, warm_start, origin)
+            incumbent = min(incumbent, ws_score)
         keep = ~(const_lb > incumbent)
         n_pruned = int(K - keep.sum())
 
@@ -377,6 +403,12 @@ def _solve_batched(profile: HierProfile, net: Network, B: int, origin: str,
     b_int = _round_batch_split_batch(res.x[:, :3], B, allowed)
     totals = score_batch(ko, ks, kl, kms, kml, b_int)
     totals = np.where(ok, totals, np.inf)
+    if prune and warm_start is not None and \
+            not (ok.any() and _warm_ok(float(totals.min()), incumbent)):
+        # The warm incumbent over-pruned (the live schedule beat every
+        # surviving lane) — bit-identity over speed: re-solve cold.
+        return _solve_batched(profile, net, B, origin, workers, keep_log,
+                              prune, objective, warm_start=None)
     assert ok.any(), "every per-cut LP failed — inconsistent profile?"
     win = int(np.argmin(totals))  # first min == reference's sequential <
 
@@ -407,7 +439,8 @@ def _solve_3w(profile: HierProfile, net: Network, B: int,
               keep_log: bool = False,
               backend: str = "batched",
               prune: bool = True,
-              objective: str = "latency") -> SchedulerResult:
+              objective: str = "latency",
+              warm_start: Optional[Schedule] = None) -> SchedulerResult:
     """Algorithm 1: enumerate mappings x cuts, LP + round, return the best.
 
     This is the canonical *three-worker* engine — the facade
@@ -420,17 +453,21 @@ def _solve_3w(profile: HierProfile, net: Network, B: int,
     minimizes the per-iteration ``T_total`` of Eq. 12;
     ``objective="throughput"`` reuses the same LP stack and pruning but
     picks the candidate with the smallest steady-state pipelined period
-    ``t_period`` (DESIGN.md §7).
+    ``t_period`` (DESIGN.md §7).  ``warm_start`` feeds a live schedule's
+    exact cost into the dominance prune as an extra incumbent — an
+    incremental re-solve that returns bit-identical results to a cold
+    solve (DESIGN.md §10) while skipping more of the candidate grid.
     """
     if objective not in OBJECTIVES:
         raise ValueError(f"unknown scheduler objective: {objective!r}")
     if backend == "reference":
+        # The oracle has no prune, so a warm incumbent cannot change it.
         return _solve_reference(profile, net, B, origin, workers, keep_log,
                                 objective)
     if backend != "batched":
         raise ValueError(f"unknown scheduler backend: {backend!r}")
     return _solve_batched(profile, net, B, origin, workers, keep_log, prune,
-                          objective)
+                          objective, warm_start)
 
 
 def solve(profile: HierProfile, net: Network, B: int,
@@ -439,7 +476,8 @@ def solve(profile: HierProfile, net: Network, B: int,
           keep_log: bool = False,
           backend: str = "batched",
           prune: bool = True,
-          objective: str = "latency") -> SchedulerResult:
+          objective: str = "latency",
+          warm_start: Optional[Schedule] = None) -> SchedulerResult:
     """Deprecated shim over the facade (DESIGN.md §9): build a triple
     fleet from the profile/network pair and plan through ``repro.api``.
     Results are bit-identical to the historical solver.  Exotic
@@ -452,9 +490,9 @@ def solve(profile: HierProfile, net: Network, B: int,
         from repro import api
         return api.plan(None, api.Fleet.from_profile(profile, net), B,
                         objective=objective, backend=backend, prune=prune,
-                        keep_log=keep_log).result
+                        keep_log=keep_log, warm_start=warm_start).result
     return _solve_3w(profile, net, B, origin, workers, keep_log, backend,
-                     prune, objective)
+                     prune, objective, warm_start)
 
 
 # ---------------------------------------------------------------------------
@@ -625,7 +663,9 @@ def solve_multi(profile: MultiProfile, net: StarNetwork, B: int,
                 keep_log: bool = False, backend: str = "batched",
                 prune: bool = True,
                 refine_passes: int = 4,
-                objective: str = "latency") -> MultiSchedulerResult:
+                objective: str = "latency",
+                warm_start: Optional[MultiSchedule] = None
+                ) -> MultiSchedulerResult:
     """Deprecated shim over the facade (DESIGN.md §9): build a star fleet
     from the profile/network pair and plan through ``repro.api``."""
     warn_deprecated(
@@ -634,14 +674,17 @@ def solve_multi(profile: MultiProfile, net: StarNetwork, B: int,
     from repro import api
     return api.plan(None, api.Fleet.from_profile(profile, net), B,
                     objective=objective, backend=backend, prune=prune,
-                    refine_passes=refine_passes, keep_log=keep_log).result
+                    refine_passes=refine_passes, keep_log=keep_log,
+                    warm_start=warm_start).result
 
 
 def _solve_multi(profile: MultiProfile, net: StarNetwork, B: int,
                  keep_log: bool = False, backend: str = "batched",
                  prune: bool = True,
                  refine_passes: int = 4,
-                 objective: str = "latency") -> MultiSchedulerResult:
+                 objective: str = "latency",
+                 warm_start: Optional[MultiSchedule] = None
+                 ) -> MultiSchedulerResult:
     """Generalized Algorithm 1 over M devices + edge + cloud — the
     canonical engine behind ``repro.api.plan`` for star fleets.
 
@@ -654,6 +697,10 @@ def _solve_multi(profile: MultiProfile, net: StarNetwork, B: int,
     simplex instead of the stacked one (the correctness oracle).
     ``objective="throughput"`` scores both stages with the steady-state
     period ``t_period_multi`` instead of ``T_total`` (DESIGN.md §7).
+    ``warm_start`` feeds a live schedule's exact cost into the dominance
+    prune as an extra incumbent — the incremental re-solve of
+    DESIGN.md §10, bit-identical to a cold solve (certified per call by
+    :func:`_warm_ok`, with a cold re-solve when the certificate fails).
     """
     if backend not in ("batched", "reference"):
         raise ValueError(f"unknown scheduler backend: {backend!r}")
@@ -678,6 +725,7 @@ def _solve_multi(profile: MultiProfile, net: StarNetwork, B: int,
 
     keep = np.ones(K, bool)
     n_pruned = 0
+    incumbent = np.inf
     if prune:
         # Same dominance rule as the 3-worker engine: the T^3 + T_update
         # cut-constants lower-bound T_total for any split — and worker_o's
@@ -692,6 +740,16 @@ def _solve_multi(profile: MultiProfile, net: StarNetwork, B: int,
         incumbent = score_batch(o_idx[trivial], s_idx[trivial],
                                 l_idx[trivial], ms[trivial], ml[trivial],
                                 b_triv).min()
+        if warm_start is not None:
+            # Warm incumbent: the live schedule's exact cost on this
+            # fleet (the incremental re-solve of DESIGN.md §10).
+            if warm_start.batch != B:
+                raise ValueError(
+                    f"warm_start batch {warm_start.batch} != B {B}")
+            ws_score = _t_total_multi(profile, net, warm_start).total \
+                if objective == "latency" else \
+                pipeline_mod.t_period_multi(profile, net, warm_start)
+            incumbent = min(incumbent, ws_score)
         keep = ~(const_lb > incumbent)
         n_pruned = int(K - keep.sum())
 
@@ -707,6 +765,12 @@ def _solve_multi(profile: MultiProfile, net: StarNetwork, B: int,
     b_int = _round_batch_split_batch(x[:, :M + 2], B, allowed)
     totals = score_batch(ko, ks, kl, kms, kml, b_int)
     totals = np.where(ok, totals, np.inf)
+    if prune and warm_start is not None and \
+            not (ok.any() and _warm_ok(float(totals.min()), incumbent)):
+        # The warm incumbent over-pruned (the live schedule beat every
+        # surviving lane) — bit-identity over speed: re-solve cold.
+        return _solve_multi(profile, net, B, keep_log, backend, prune,
+                            refine_passes, objective, warm_start=None)
     assert ok.any(), "every per-cut LP failed — inconsistent profile?"
     win = int(np.argmin(totals))  # first min == reference's sequential <
 

@@ -103,6 +103,59 @@ class HierLoopConfig:
     pipeline_depth: int = 1           # K minibatches in flight (§7); 1 =
     #                                   barrier-per-iteration execution
     objective: str = "latency"        # scheduler objective (§7)
+    ckpt_dir: Optional[str] = None    # crash-safe resume (DESIGN.md §10)
+    ckpt_every: int = 50
+    keep: int = 3
+    fail_at: Optional[int] = None     # raise after completing this step
+
+
+def _sched_to_json(s) -> Dict[str, Any]:
+    """JSON form of a (Multi)Schedule — ints and strings only, so the
+    round-trip through the checkpoint manifest is exact."""
+    from repro.core.cost_model import MultiSchedule
+    if isinstance(s, MultiSchedule):
+        return {"kind": "star", "worker_o": s.worker_o,
+                "worker_l": s.worker_l, "s_workers": list(s.s_workers),
+                "m_s": list(s.m_s), "m_l": s.m_l, "b_o": s.b_o,
+                "b_s": list(s.b_s), "b_l": s.b_l}
+    return {"kind": "triple", "worker_o": s.worker_o,
+            "worker_s": s.worker_s, "worker_l": s.worker_l, "m_s": s.m_s,
+            "m_l": s.m_l, "b_o": s.b_o, "b_s": s.b_s, "b_l": s.b_l}
+
+
+def _sched_from_json(d: Dict[str, Any]):
+    from repro.core.cost_model import MultiSchedule, Schedule
+    if d["kind"] == "star":
+        return MultiSchedule(
+            worker_o=d["worker_o"], worker_l=d["worker_l"],
+            s_workers=tuple(d["s_workers"]), m_s=tuple(d["m_s"]),
+            m_l=d["m_l"], b_o=d["b_o"], b_s=tuple(d["b_s"]), b_l=d["b_l"])
+    return Schedule(d["worker_o"], d["worker_s"], d["worker_l"], d["m_s"],
+                    d["m_l"], d["b_o"], d["b_s"], d["b_l"])
+
+
+def _prof_arrays(p) -> Dict[str, np.ndarray]:
+    return {"L_f": np.asarray(p.L_f), "L_b": np.asarray(p.L_b),
+            "L_u": np.asarray(p.L_u)}
+
+
+def _profile_from_arrays(template, worker_names, arrays):
+    """Rebuild a profile from checkpointed timing rows.  The per-layer
+    columns (MP/MO/MG/sample_bytes) are hardware-membership invariant, so
+    they come from the caller's template; the per-worker rows and (for a
+    star) the membership come from the checkpoint."""
+    from repro.core.cost_model import HierProfile, MultiProfile
+    if worker_names is None:
+        return HierProfile(
+            layer_names=template.layer_names, L_f=arrays["L_f"],
+            L_b=arrays["L_b"], L_u=arrays["L_u"], MP=template.MP,
+            MO=template.MO, sample_bytes=template.sample_bytes,
+            MG=template.MG)
+    return MultiProfile(
+        layer_names=template.layer_names, worker_names=tuple(worker_names),
+        L_f=arrays["L_f"], L_b=arrays["L_b"], L_u=arrays["L_u"],
+        MP=template.MP, MO=template.MO,
+        sample_bytes=template.sample_bytes, MG=template.MG)
 
 
 def _ema_profile_update(prof, baseline, slow: Dict[str, float],
@@ -142,8 +195,9 @@ def _loop_ops(topology: str, model, profile, net, cfg: "HierLoopConfig"):
         return dict(
             names=WORKERS,
             widx={w: i for i, w in enumerate(WORKERS)},
-            solve=lambda p: scheduler._solve_3w(p, net, cfg.batch,
-                                                objective=cfg.objective),
+            solve=lambda p, warm=None: scheduler._solve_3w(
+                p, net, cfg.batch, objective=cfg.objective,
+                warm_start=warm),
             fill=lambda p, s: _t_total(p, net, s).total,
             period=lambda p, s: t_period(p, net, s),
             step_fn=lambda s: jitted_hybrid_step(model, s.m_s, s.m_l,
@@ -163,8 +217,8 @@ def _loop_ops(topology: str, model, profile, net, cfg: "HierLoopConfig"):
     return dict(
         names=profile.worker_names,
         widx=profile.widx,
-        solve=lambda p: scheduler._solve_multi(p, net, cfg.batch,
-                                               objective=cfg.objective),
+        solve=lambda p, warm=None: scheduler._solve_multi(
+            p, net, cfg.batch, objective=cfg.objective, warm_start=warm),
         fill=lambda p, s: _t_total_multi(p, net, s).total,
         period=lambda p, s: t_period_multi(p, net, s),
         step_fn=lambda s: jitted_multi_hybrid_step(model, s.m_s, s.m_l,
@@ -179,7 +233,8 @@ def _loop_ops(topology: str, model, profile, net, cfg: "HierLoopConfig"):
 def _run_loop(cfg: HierLoopConfig, model, profile, net, data,
               worker_slowdown: Optional[Callable[[int], Dict[str, float]]]
               = None, log: Optional[Callable[[str], None]] = None, *,
-              topology: str, initial_schedule=None) -> Dict[str, Any]:
+              topology: str, initial_schedule=None,
+              churn=None) -> Dict[str, Any]:
     """Train any layer stack under the HierTrain schedule, re-solving the
     schedule online as (simulated) worker speeds drift — the engine
     behind :meth:`repro.api.Plan.train` for both topologies.
@@ -205,12 +260,51 @@ def _run_loop(cfg: HierLoopConfig, model, profile, net, data,
     pay one ``t_period`` each — and a re-schedule that actually changes
     the schedule breaks the pipe, so the fill is re-paid at that step
     regardless of window position.
+
+    **Elastic fleets** (DESIGN.md §10): ``churn`` is a
+    :class:`~repro.core.churn.ChurnTrace` (star topology only).  Events
+    pinned to step ``s`` are applied at the top of step ``s``; a
+    membership change remaps the live schedule onto the survivors and
+    re-solves with it as a warm incumbent (bit-identical to a cold
+    solve on the survivor fleet, by the ``_warm_ok`` certificate), a
+    crash additionally charges the lost in-flight fill as recovery
+    time, and a join seeds the newcomer's profile rows from the fleet's
+    reference tier for the EMA to refine.  Measured solver seconds land
+    only in the returned ``churn_log`` — the simulated ``wall`` stays a
+    pure function of (cost model, trace, seed) so resume is
+    bit-reproducible.
+
+    **Crash-safe resume**: with ``cfg.ckpt_dir`` set, every
+    ``cfg.ckpt_every`` steps the loop atomically checkpoints params,
+    the EMA'd and baseline profiles, the reference rows, the schedule,
+    the network, the simulated wall clock, and the step.  On start the
+    loop restores the newest readable checkpoint and continues; a
+    resumed run is bitwise equal to an uninterrupted one from the
+    resume step onward (``history`` then covers only the resumed tail;
+    ``resumed_from`` records the step).  ``cfg.fail_at`` injects a
+    failure after that step completes (post-checkpoint) to exercise
+    the path.
     """
     import copy
 
+    if churn is not None and topology != "star":
+        raise ValueError(
+            "churn is native to the star topology: membership is a "
+            "property of the M-device fleet; the paper's fixed "
+            "three-worker triple has no notion of join/leave "
+            "(use Fleet.from_table2() or topology='star')")
+    if churn is not None:
+        from repro.core.churn import (DeviceCrash, apply_event,
+                                      reference_rows, remap_schedule)
+
     ops = _loop_ops(topology, model, profile, net, cfg)
-    widx = ops["widx"]
     prof = copy.deepcopy(profile)
+    # Baseline for the straggler EMA and the simulated "true" speeds.
+    # Static fleets: a value-identical copy of ``profile`` (arithmetic
+    # unchanged).  Elastic fleets: membership-edited alongside ``prof``
+    # so it always describes the *current* fleet at nominal speed.
+    base_prof = copy.deepcopy(profile)
+    ref = reference_rows(base_prof) if churn is not None else None
     # The solver is a pure function of the profile values, so a caller
     # that already planned this exact (profile, net, B, objective) —
     # Plan.train — can seed the loop and skip the duplicate solve.
@@ -218,18 +312,101 @@ def _run_loop(cfg: HierLoopConfig, model, profile, net, data,
         else ops["solve"](prof).schedule
     params = model.init(jax.random.PRNGKey(cfg.seed))
     wall = 0.0
+    start = 0
+    resumed_from = None
+    churn_log: List[Dict[str, Any]] = []
+
+    manager = CheckpointManager(cfg.ckpt_dir, cfg.keep) \
+        if cfg.ckpt_dir and cfg.ckpt_every else None
+    if manager is not None:
+        is_star = topology == "star"
+
+        def _like(ckpt_step, extra):
+            if extra.get("seed") != cfg.seed:
+                raise ValueError(
+                    f"checkpoint seed {extra.get('seed')} does not "
+                    f"match cfg.seed {cfg.seed}: refusing to resume a "
+                    "different run")
+            names = extra["worker_names"] if is_star else None
+            rows = len(names) if is_star \
+                else np.asarray(profile.L_f).shape[0]
+            cols = np.asarray(profile.L_f).shape[1]
+
+            def grid():
+                return {k: np.zeros((rows, cols))
+                        for k in ("L_f", "L_b", "L_u")}
+
+            like = {"params": model.init(jax.random.PRNGKey(cfg.seed)),
+                    "prof": grid()}
+            if is_star:
+                like["base"] = grid()
+                like["ref"] = {k: np.zeros(cols)
+                               for k in ("L_f", "L_b", "L_u")}
+            return like
+
+        ckpt_step, tree, extra = manager.restore_latest_with(_like)
+        if ckpt_step is not None:
+            start = resumed_from = ckpt_step
+            params = tree["params"]
+            wall = float(extra["wall"])
+            sched = _sched_from_json(extra["sched"])
+            names = tuple(extra["worker_names"]) if is_star else None
+            prof = _profile_from_arrays(profile, names, tree["prof"])
+            if is_star:
+                from repro.core.cost_model import StarNetwork
+                base_prof = _profile_from_arrays(profile, names,
+                                                 tree["base"])
+                net = StarNetwork(
+                    bw_de=np.asarray(extra["bw_de"], dtype=np.float64),
+                    bw_ec=float(extra["bw_ec"]))
+                ref = (np.asarray(tree["ref"]["L_f"]),
+                       np.asarray(tree["ref"]["L_b"]),
+                       np.asarray(tree["ref"]["L_u"]))
+            ops = _loop_ops(topology, model, prof, net, cfg)
+
     history = []
     losses = []
-    for step in range(cfg.total_steps):
+    for step in range(start, cfg.total_steps):
         prev_sched = sched
+        events = churn.events_at(step) if churn is not None else ()
+        if events:
+            # A crash kills the in-flight attempt: survivors discover it
+            # at the barrier after ~one fill of the pre-crash schedule
+            # at baseline speeds, then re-run the step on the new fleet.
+            lost = ops["fill"](base_prof, sched) \
+                if any(isinstance(e, DeviceCrash) for e in events) \
+                else 0.0
+            wall += lost
+            for ev in events:
+                prof, base_prof, net, _ = apply_event(prof, base_prof,
+                                                      net, ref, ev)
+            # ops closures capture (membership, net) — rebuild on churn
+            ops = _loop_ops(topology, model, prof, net, cfg)
+            warm = remap_schedule(sched, prof)
+            t0 = time.perf_counter()
+            res = ops["solve"](prof, warm)
+            resolve_s = time.perf_counter() - t0
+            sched = res.schedule
+            churn_log.append({
+                "step": step,
+                "events": [f"{type(e).__name__}:{e.name}"
+                           for e in events],
+                "m": len(ops["names"]) - 2,
+                "warm": warm is not None, "lost_s": lost,
+                "resolve_s": resolve_s, "n_pruned": res.n_pruned,
+                "n_candidates": res.n_candidates})
         slow = worker_slowdown(step) if worker_slowdown else {}
         if worker_slowdown is not None and step > 0 and \
                 step % cfg.resched_every == 0:
-            _ema_profile_update(prof, profile, slow, ops["names"], cfg.ema)
-            sched = ops["solve"](prof).schedule
+            _ema_profile_update(prof, base_prof, slow, ops["names"],
+                                cfg.ema)
+            sched = ops["solve"](prof, sched).schedule
         # timing from the cost model under the *actual* current speeds
-        true_prof = copy.deepcopy(profile)
+        true_prof = copy.deepcopy(base_prof)
+        widx = ops["widx"]
         for w, factor in (slow or {}).items():
+            if w not in widx:   # straggler report for a departed device
+                continue
             i = widx[w]
             true_prof.L_f[i] *= factor
             true_prof.L_b[i] *= factor
@@ -255,8 +432,31 @@ def _run_loop(cfg: HierLoopConfig, model, profile, net, data,
         history.append({"step": step + 1, "loss": losses[-1],
                         "wall": wall, **ops["hist"](sched),
                         "sched": sched})
+        if manager is not None and (step + 1) % cfg.ckpt_every == 0:
+            tree = {"params": params, "prof": _prof_arrays(prof)}
+            extra = {"step": step + 1, "wall": wall, "seed": cfg.seed,
+                     "topology": topology,
+                     "sched": _sched_to_json(sched)}
+            if topology == "star":
+                rows = ref if ref is not None else (
+                    np.asarray(base_prof.L_f[0]),
+                    np.asarray(base_prof.L_b[0]),
+                    np.asarray(base_prof.L_u[0]))
+                tree["base"] = _prof_arrays(base_prof)
+                tree["ref"] = {"L_f": np.asarray(rows[0]),
+                               "L_b": np.asarray(rows[1]),
+                               "L_u": np.asarray(rows[2])}
+                extra["worker_names"] = list(prof.worker_names)
+                extra["bw_de"] = [float(x)
+                                  for x in np.asarray(net.bw_de)]
+                extra["bw_ec"] = float(net.bw_ec)
+            manager.save(step + 1, tree, extra=extra)
+        if cfg.fail_at is not None and step + 1 == cfg.fail_at:
+            raise InjectedFailure(
+                f"injected failure after step {step+1}")
     return {"params": params, "history": history, "wall": wall,
-            "final_schedule": sched}
+            "final_schedule": sched, "resumed_from": resumed_from,
+            "churn_log": churn_log}
 
 
 def run_hier_loop(cfg: HierLoopConfig, model, profile, net, data,

@@ -74,6 +74,88 @@ def test_restore_latest_empty(tmp_path):
     assert step is None and restored is None
 
 
+def test_stray_entries_ignored(tmp_path):
+    """Strict step_\\d{8} parsing: notes files, torn .tmp dirs, and
+    oddly named directories never break listing or GC."""
+    tree = _tree(jax.random.PRNGKey(0))
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(1, tree)
+    (tmp_path / "step_notes.txt").write_text("operator scribbles")
+    os.makedirs(tmp_path / "step_00000009.tmp")
+    os.makedirs(tmp_path / "step_abc")
+    assert latest_step(str(tmp_path)) == 1
+    mgr.save(2, tree)
+    mgr.save(3, tree)     # GC of step 1 must skip the strays
+    assert latest_step(str(tmp_path)) == 3
+    assert (tmp_path / "step_notes.txt").exists()
+    assert (tmp_path / "step_abc").exists()
+
+
+def test_corrupt_newest_falls_back(tmp_path):
+    """restore_latest skips an unreadable newest step with a warning and
+    restores the previous one."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    t1, t2 = _tree(k1), _tree(k2)
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, t1)
+    mgr.save(2, t2)
+    payload = tmp_path / "step_00000002" / "arrays.npz"
+    with open(payload, "r+b") as f:
+        f.seek(100)
+        f.write(b"\xde\xad")
+    with pytest.warns(RuntimeWarning, match="unreadable"):
+        step, restored = mgr.restore_latest(t1)
+    assert step == 1
+    for a, b in zip(jax.tree.leaves(t1), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_all_corrupt_raises(tmp_path):
+    tree = _tree(jax.random.PRNGKey(0))
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, tree)
+    with open(tmp_path / "step_00000001" / "arrays.npz", "r+b") as f:
+        f.seek(100)
+        f.write(b"\xde\xad")
+    with pytest.warns(RuntimeWarning, match="unreadable"):
+        with pytest.raises(IOError):
+            mgr.restore_latest(tree)
+
+
+def test_restore_latest_with_extra(tmp_path):
+    """Two-phase restore: like_fn sees the manifest extra before the
+    arrays load, so it can rebuild a membership-dependent tree."""
+    tree = _tree(jax.random.PRNGKey(0))
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(5, tree, extra={"fleet": ["a", "b"], "wall": 1.25})
+    seen = {}
+
+    def like_fn(step, extra):
+        seen["step"], seen["extra"] = step, extra
+        return tree
+
+    step, restored, extra = mgr.restore_latest_with(like_fn)
+    assert step == 5 and seen["step"] == 5
+    assert extra["fleet"] == ["a", "b"] and extra["wall"] == 1.25
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_float64_roundtrip_exact(tmp_path):
+    """f64 leaves (hier-loop profile rows) restore bit-exactly even with
+    jax x64 disabled — the loader must not let jnp downcast them."""
+    rng = np.random.default_rng(0)
+    tree = {"L_f": rng.random((3, 5)), "L_b": rng.random((3, 5))}
+    save_checkpoint(str(tmp_path), 1, tree)
+    out = load_checkpoint(str(tmp_path), 1,
+                          {k: np.zeros_like(v) for k, v in tree.items()})
+    for k in tree:
+        assert np.asarray(out[k]).dtype == np.float64
+        np.testing.assert_array_equal(np.asarray(out[k]), tree[k])
+
+
 def test_reshard_on_load(tmp_path):
     """Elastic restore: load with explicit (single-device) shardings."""
     tree = _tree(jax.random.PRNGKey(0))

@@ -1,0 +1,277 @@
+"""Elastic fleets (DESIGN.md §10): deterministic churn traces,
+membership edits, schedule remapping, warm-started re-solve
+bit-identity, and exact-SGD preservation across membership changes."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.churn import (ChurnTrace, DeviceCrash, DeviceJoin,
+                              DeviceLeave, LinkDegrade, apply_event,
+                              poisson_trace, reference_rows,
+                              remap_schedule)
+from repro.core.cost_model import StarNetwork
+from repro.core.profiler import multi_analytic_profile
+from repro.data.pipeline import SyntheticImages
+
+
+def _tiny_mlp():
+    from repro.models.cnn import DenseSpec, LayeredModel
+    specs = tuple(DenseSpec(f"fc{i}", 16) for i in range(4)) + \
+        (DenseSpec("out", 5, relu=False),)
+    return LayeredModel("tiny_mlp", specs, (8,), 5)
+
+
+def _star(model, slowdowns=(1.0, 1.2, 1.8)):
+    prof = multi_analytic_profile(model, device_slowdowns=slowdowns)
+    bw = np.linspace(4.0, 3.0, len(slowdowns)) * 1e6 / 8
+    net = StarNetwork(bw_de=bw, bw_ec=2.0 * 1e6 / 8)
+    return prof, net
+
+
+# ---------------------------------------------------------------------------
+# trace generation
+# ---------------------------------------------------------------------------
+
+def test_poisson_trace_deterministic():
+    devs = ("device_0", "device_1", "device_2")
+    a = poisson_trace(devs, 200, seed=7, join_rate=0.1, leave_rate=0.1,
+                      crash_rate=0.05, degrade_rate=0.1)
+    b = poisson_trace(devs, 200, seed=7, join_rate=0.1, leave_rate=0.1,
+                      crash_rate=0.05, degrade_rate=0.1)
+    assert a == b                      # pure function of the seed
+    c = poisson_trace(devs, 200, seed=8, join_rate=0.1, leave_rate=0.1,
+                      crash_rate=0.05, degrade_rate=0.1)
+    assert a != c
+
+
+def test_poisson_trace_respects_bounds():
+    devs = ("device_0", "device_1")
+    tr = poisson_trace(devs, 500, seed=0, join_rate=0.2, leave_rate=0.3,
+                       crash_rate=0.2, min_devices=1, max_devices=3)
+    live = set(devs)
+    for e in tr.events:
+        if isinstance(e, (DeviceLeave, DeviceCrash)):
+            live.discard(e.name)
+        elif isinstance(e, DeviceJoin):
+            assert e.name not in live
+            live.add(e.name)
+        assert 1 <= len(live) <= 3
+
+
+def test_trace_ordering_and_since():
+    tr = ChurnTrace((DeviceLeave(2, "a"), DeviceJoin(5, "b"),
+                     LinkDegrade(5, "b", 0.5)))
+    assert tr.events_at(5) == (DeviceJoin(5, "b"),
+                               LinkDegrade(5, "b", 0.5))
+    assert tr.since(5).events == tr.events_at(5)
+    assert tr.max_step == 5
+    with pytest.raises(AssertionError):
+        ChurnTrace((DeviceJoin(5, "b"), DeviceLeave(2, "a")))
+
+
+# ---------------------------------------------------------------------------
+# membership edits
+# ---------------------------------------------------------------------------
+
+def test_apply_events_roundtrip_membership():
+    model = _tiny_mlp()
+    prof, net = _star(model)
+    base = prof
+    ref = reference_rows(base)
+
+    prof2, base2, net2, changed = apply_event(
+        prof, base, net, ref, DeviceJoin(3, "dev_j0", slowdown=2.0,
+                                         uplink_mbps=4.0))
+    assert changed
+    assert prof2.worker_names[:-2] == ("device_0", "device_1",
+                                       "device_2", "dev_j0")
+    i = prof2.device_index("dev_j0")
+    np.testing.assert_array_equal(prof2.L_f[i], ref[0] * 2.0)
+    assert net2.bw_de[i] == 4.0 * 1e6 / 8
+    # survivors' rows are byte-identical to pre-churn
+    np.testing.assert_array_equal(prof2.L_f[:3], prof.L_f[:3])
+
+    prof3, base3, net3, changed = apply_event(
+        prof2, base2, net2, ref, DeviceLeave(4, "device_1"))
+    assert changed
+    assert "device_1" not in prof3.worker_names
+    assert len(net3.bw_de) == 3
+
+    _, _, net4, changed = apply_event(prof3, base3, net3, ref,
+                                      LinkDegrade(5, "device_0", 0.5))
+    assert not changed
+    assert net4.bw_de[0] == net3.bw_de[0] * 0.5
+
+    with pytest.raises(ValueError):
+        prof.add_device("device_0", ref[0], ref[1], ref[2])   # duplicate
+    with pytest.raises(ValueError):
+        prof.drop_device("edge")                              # not a device
+    with pytest.raises(ValueError):
+        net.scale_uplink(0, 0.0)
+
+
+def test_drop_last_device_rejected():
+    model = _tiny_mlp()
+    prof, _ = _star(model, slowdowns=(1.0,))
+    with pytest.raises(ValueError):
+        prof.drop_device("device_0")
+
+
+# ---------------------------------------------------------------------------
+# schedule remap: exact-SGD semantics (sample set unchanged)
+# ---------------------------------------------------------------------------
+
+def test_remap_folds_lost_samples_into_task_o():
+    from repro.core.cost_model import MultiSchedule, _validate_multi
+    model = _tiny_mlp()
+    prof, net = _star(model)
+    # hand-built schedule with a loaded TASK-S device so the fold is
+    # observable (the solver's optimum may park everything on o/l)
+    sched = MultiSchedule(worker_o="cloud", worker_l="edge",
+                          s_workers=("device_0", "device_1", "device_2"),
+                          m_s=(2, 2, 0), m_l=4, b_o=10, b_s=(8, 6, 0),
+                          b_l=0)
+    _validate_multi(prof, sched)
+    departed, lost = "device_1", 6
+    prof2 = prof.drop_device(departed)
+    re = remap_schedule(sched, prof2)
+    assert re is not None
+    _validate_multi(prof2, re)
+    assert re.b_o == sched.b_o + lost
+    assert re.batch == sched.batch        # same sample set => exact SGD
+    assert departed not in re.s_workers
+
+    # a joiner enters idle
+    prof3 = prof.add_device("dev_j0", prof.L_f[0], prof.L_b[0],
+                            prof.L_u[0])
+    re2 = remap_schedule(sched, prof3)
+    j = re2.s_workers.index("dev_j0")
+    assert re2.m_s[j] == 0 and re2.b_s[j] == 0
+    assert re2.batch == sched.batch
+
+    # losing TASK O's owner kills the cut structure
+    sched_o = MultiSchedule(worker_o="device_0", worker_l="cloud",
+                            s_workers=("device_1", "device_2"),
+                            m_s=(2, 0), m_l=4, b_o=18, b_s=(6, 0), b_l=0)
+    assert remap_schedule(sched_o, prof.drop_device("device_0")) is None
+
+
+# ---------------------------------------------------------------------------
+# warm-started re-solve: bit-identical to a cold solve
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("objective", ["latency", "throughput"])
+def test_warm_solve_bit_identical(objective):
+    from repro.core.scheduler import _solve_multi
+    model = _tiny_mlp()
+    prof, net = _star(model, slowdowns=(1.0, 1.3, 1.7, 2.2))
+    full = _solve_multi(prof, net, 24, objective=objective).schedule
+    survivors = prof.drop_device("device_2")
+    net_s = net.drop_device(2)
+    warm = remap_schedule(full, survivors)
+    assert warm is not None
+    cold = _solve_multi(survivors, net_s, 24, objective=objective)
+    ws = _solve_multi(survivors, net_s, 24, objective=objective,
+                      warm_start=warm)
+    assert ws.schedule == cold.schedule           # bit-identical argmin
+    assert ws.t_total == cold.t_total
+    assert ws.n_pruned >= cold.n_pruned           # never prunes less
+
+
+def test_warm_solve_wrong_batch_rejected():
+    from repro.core.scheduler import _solve_multi
+    model = _tiny_mlp()
+    prof, net = _star(model)
+    sched = _solve_multi(prof, net, 24).schedule
+    with pytest.raises(ValueError):
+        _solve_multi(prof, net, 32, warm_start=sched)
+
+
+# ---------------------------------------------------------------------------
+# loop-level: churn == fresh fleet; determinism; triple rejects churn
+# ---------------------------------------------------------------------------
+
+def test_churn_at_step0_equals_fresh_survivor_fleet():
+    from repro import api
+    model = _tiny_mlp()
+    prof, net = _star(model)
+    data = SyntheticImages(model.input_shape, model.num_classes, 24,
+                           seed=0)
+    trace = ChurnTrace((DeviceLeave(0, "device_1"),))
+    churned = api.plan(model, api.Fleet.from_profile(prof, net), 24) \
+        .train(data, steps=5, seed=3, churn=trace)
+    fresh = api.plan(
+        model, api.Fleet.from_profile(prof.drop_device("device_1"),
+                                      net.drop_device(1)), 24) \
+        .train(data, steps=5, seed=3)
+    for a, b in zip(jax.tree.leaves(churned["params"]),
+                    jax.tree.leaves(fresh["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for ha, hb in zip(churned["history"], fresh["history"]):
+        assert ha["loss"] == hb["loss"] and ha["sched"] == hb["sched"]
+
+
+def test_midrun_churn_schedule_matches_cold_solve():
+    from repro import api
+    from repro.core.scheduler import _solve_multi
+    model = _tiny_mlp()
+    prof, net = _star(model)
+    data = SyntheticImages(model.input_shape, model.num_classes, 24,
+                           seed=0)
+    trace = ChurnTrace((DeviceLeave(3, "device_2"),))
+    out = api.plan(model, api.Fleet.from_profile(prof, net), 24) \
+        .train(data, steps=6, seed=3, churn=trace)
+    assert len(out["churn_log"]) == 1 and out["churn_log"][0]["warm"]
+    cold = _solve_multi(prof.drop_device("device_2"), net.drop_device(2),
+                        24).schedule
+    assert out["history"][3]["sched"] == cold
+    assert out["final_schedule"] == cold
+
+
+def test_churn_run_deterministic_and_resumable(tmp_path):
+    from repro import api
+    from repro.train.loop import InjectedFailure
+    model = _tiny_mlp()
+    prof, net = _star(model)
+    fleet = api.Fleet.from_profile(prof, net)
+    data = SyntheticImages(model.input_shape, model.num_classes, 24,
+                           seed=0)
+    trace = poisson_trace(prof.worker_names[:-2], 18, seed=1,
+                          join_rate=0.15, leave_rate=0.1,
+                          crash_rate=0.08, degrade_rate=0.1)
+    assert trace.events, "trace unexpectedly empty; pick another seed"
+    kw = dict(steps=18, seed=3, churn=trace)
+    ref = api.plan(model, fleet, 24).train(data, **kw)
+    again = api.plan(model, fleet, 24).train(data, **kw)
+    assert ref["wall"] == again["wall"]           # simulated clock is pure
+
+    with pytest.raises(InjectedFailure):
+        api.plan(model, fleet, 24).train(
+            data, ckpt_dir=str(tmp_path), ckpt_every=4, fail_at=11, **kw)
+    out = api.plan(model, fleet, 24).train(
+        data, ckpt_dir=str(tmp_path), ckpt_every=4, **kw)
+    assert out["resumed_from"] == 8
+    for a, b in zip(jax.tree.leaves(ref["params"]),
+                    jax.tree.leaves(out["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    tail = [h for h in ref["history"] if h["step"] > 8]
+    assert len(tail) == len(out["history"])
+    for ha, hb in zip(tail, out["history"]):
+        assert ha["loss"] == hb["loss"]
+        assert ha["wall"] == hb["wall"]
+        assert ha["sched"] == hb["sched"]
+    assert ref["wall"] == out["wall"]
+
+
+def test_churn_rejected_on_triple():
+    from repro import api
+    from repro.core.cost_model import Network
+    from repro.core.profiler import analytic_profile
+    model = _tiny_mlp()
+    fleet = api.Fleet.from_profile(analytic_profile(model),
+                                   Network(5e6 / 8, 1e6 / 8))
+    data = SyntheticImages(model.input_shape, model.num_classes, 16,
+                           seed=0)
+    with pytest.raises(ValueError, match="star"):
+        api.plan(model, fleet, 16).train(
+            data, steps=2, churn=ChurnTrace((DeviceLeave(0, "x"),)))

@@ -174,3 +174,83 @@ def test_multi_hier_loop_straggler_heals_and_recovers():
     assert degraded != base, "straggler never degraded the schedule"
     assert final == base, \
         "loop did not return to the pre-straggle schedule after recovery"
+
+
+# ---------------------------------------------------------------------------
+# Hier-loop crash-safe resume (DESIGN.md §10): a killed-and-resumed run is
+# bitwise equal to an uninterrupted one — final params AND history tail —
+# including restored EMA profile state mid-straggle.
+# ---------------------------------------------------------------------------
+
+def _tiny_mlp():
+    from repro.models.cnn import DenseSpec, LayeredModel
+    specs = tuple(DenseSpec(f"fc{i}", 16) for i in range(4)) + \
+        (DenseSpec("out", 5, relu=False),)
+    return LayeredModel("tiny_mlp", specs, (8,), 5)
+
+
+def _assert_resume_bitwise(plan_fn, data, tmp_path, fail_at, *, steps,
+                           slowdown):
+    """Reference (no ckpt) vs. kill-at-``fail_at``-then-resume."""
+    kw = dict(steps=steps, lr=0.05, resched_every=4, ema=0.8, seed=3,
+              worker_slowdown=slowdown)
+    ref = plan_fn().train(data, **kw)
+    with pytest.raises(InjectedFailure):
+        plan_fn().train(data, ckpt_dir=str(tmp_path), ckpt_every=3,
+                        fail_at=fail_at, **kw)
+    out = plan_fn().train(data, ckpt_dir=str(tmp_path), ckpt_every=3,
+                          **kw)
+    resume = (fail_at // 3) * 3
+    assert out["resumed_from"] == resume
+    for a, b in zip(jax.tree.leaves(ref["params"]),
+                    jax.tree.leaves(out["params"])):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    tail = [h for h in ref["history"] if h["step"] > resume]
+    assert len(tail) == len(out["history"]) > 0
+    for ha, hb in zip(tail, out["history"]):
+        assert ha["loss"] == hb["loss"]      # bitwise: == on floats
+        assert ha["wall"] == hb["wall"]
+        assert ha["sched"] == hb["sched"]
+    assert ref["wall"] == out["wall"]
+
+
+@pytest.mark.parametrize("fail_at", [4, 10])
+def test_hier_kill_resume_triple_bitwise(tmp_path, fail_at):
+    from repro import api
+    from repro.core.cost_model import Network
+    from repro.core.profiler import analytic_profile
+
+    model = _tiny_mlp()
+    profile = analytic_profile(model)
+    net = Network(bw_de=5e6 / 8, bw_ec=1e6 / 8)
+    fleet = api.Fleet.from_profile(profile, net)
+    data = SyntheticImages(model.input_shape, model.num_classes, 16,
+                           seed=0)
+
+    def slowdown(step):   # straggle across the kill so EMA state matters
+        return {"edge": 6.0} if 2 <= step < 12 else {}
+
+    _assert_resume_bitwise(lambda: api.plan(model, fleet, 16), data,
+                           tmp_path, fail_at, steps=14, slowdown=slowdown)
+
+
+@pytest.mark.parametrize("fail_at", [4, 10])
+def test_hier_kill_resume_star_bitwise(tmp_path, fail_at):
+    from repro import api
+    from repro.core.cost_model import StarNetwork
+    from repro.core.profiler import multi_analytic_profile
+
+    model = _tiny_mlp()
+    prof = multi_analytic_profile(model, device_slowdowns=(1.0, 1.2))
+    net = StarNetwork(bw_de=np.array([4.0, 3.0]) * 1e6 / 8,
+                      bw_ec=2.0 * 1e6 / 8)
+    fleet = api.Fleet.from_profile(prof, net)
+    data = SyntheticImages(model.input_shape, model.num_classes, 24,
+                           seed=0)
+
+    def slowdown(step):
+        return {"cloud": 30.0} if 2 <= step < 12 else {}
+
+    _assert_resume_bitwise(lambda: api.plan(model, fleet, 24), data,
+                           tmp_path, fail_at, steps=14, slowdown=slowdown)
