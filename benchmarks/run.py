@@ -6,8 +6,9 @@ section it re-times the Table II scheduler search with both backends
 (reference scalar simplex vs batched engine) plus the M-device sweep
 (``benchmarks/fig_multidevice``), the pipelined steady-state sweep
 (``benchmarks/fig_pipeline``), the LM-fleet LayerStack sweep
-(``benchmarks/fig_lm_fleet``) and the elastic-fleet churn benchmark
-(``benchmarks/fig_churn``), and writes runtimes, speedups, periods and
+(``benchmarks/fig_lm_fleet``), the elastic-fleet churn benchmark
+(``benchmarks/fig_churn``) and the wire-compression sweep
+(``benchmarks/fig_wire``), and writes runtimes, speedups, periods and
 the chosen schedules to ``BENCH_sched.json`` (or PATH), so the
 scheduler-engine perf trajectory is tracked across PRs.  Every record is
 stamped with the git SHA (``+dirty`` when regenerated before the commit it
@@ -49,6 +50,9 @@ _DET_KEYS = {
                  "period_gain", "speedup_all_edge", "speedup_all_cloud",
                  "lps_solved", "candidates", "pruned", "schedule_lat",
                  "schedule_thr"),
+    "wire.rows": ("family", "M", "layers", "t_total_none", "t_total_int8",
+                  "wire_gain", "mo_ratio", "mg_ratio", "cut_shifted",
+                  "schedule_none", "schedule_int8"),
     "churn.rows": ("M", "steps", "n_events", "events",
                    "schedule_initial", "schedule_final",
                    "warm_equals_cold", "resolves", "lps_pruned_warm",
@@ -62,7 +66,8 @@ def run_sections() -> int:
     from benchmarks import (fig6_model_validity, fig7_8_speedup,
                             fig9_10_sota, fig11_edge_cpu, fig_churn,
                             fig_lm_fleet, fig_multidevice, fig_pipeline,
-                            roofline_report, table2_sched_runtime)
+                            fig_wire, roofline_report,
+                            table2_sched_runtime)
     sections = [
         ("Fig.6 model validity", fig6_model_validity.run),
         ("Fig.7/8 vs All-Edge/All-Cloud", fig7_8_speedup.run),
@@ -73,6 +78,7 @@ def run_sections() -> int:
         ("Pipelined steady state (T_period)", fig_pipeline.run),
         ("LM fleet via LayerStack (beyond the paper)", fig_lm_fleet.run),
         ("Elastic fleet churn (beyond the paper)", fig_churn.run),
+        ("Wire compression (beyond the paper)", fig_wire.run),
         ("Roofline report (from dry-run)", roofline_report.run),
     ]
     failures = 0
@@ -92,12 +98,15 @@ def run_sections() -> int:
 
 def _build_payload(include_reference: bool = True) -> dict:
     from benchmarks import fig_churn, fig_lm_fleet, fig_multidevice, \
-        fig_pipeline, table2_sched_runtime
+        fig_pipeline, fig_wire, table2_sched_runtime
     payload = table2_sched_runtime.run_json(include_reference)
     payload["multidevice"] = fig_multidevice.run_json()
     payload["pipeline"] = fig_pipeline.run_json()
     payload["lm_fleet"] = fig_lm_fleet.run_json()
     payload["churn"] = fig_churn.run_json()
+    # exec timings ride only on full --json runs; the drift check needs
+    # just the deterministic planning rows
+    payload["wire"] = fig_wire.run_json(include_exec=include_reference)
     return payload
 
 
@@ -130,6 +139,10 @@ def run_sched_json(path: str) -> int:
               f"(sim err {r['sim_rel_err']:.1%}) vs all-edge "
               f"{r['speedup_all_edge']:.2f}x / all-cloud "
               f"{r['speedup_all_cloud']:.2f}x")
+    for r in payload["wire"]["rows"]:
+        print(f"  wire {r['family']:>9} M={r['M']}: T_total "
+              f"{r['t_total_none']:.2f}s -> int8 {r['t_total_int8']:.2f}s "
+              f"({r['wire_gain']:.2f}x), cut shifted {r['cut_shifted']}")
     for r in payload["churn"]["rows"]:
         print(f"  churn M={r['M']}: {r['n_events']} events, recovery "
               f"{r['recovery_s']:.2f}s, warm/cold prune "
@@ -172,6 +185,8 @@ def check_schedules(path: str) -> int:
         "pipeline.fleet": (committed.get("pipeline", {}).get("fleet", []),
                            fresh["pipeline"]["fleet"]),
         "lm_fleet": (committed.get("lm_fleet", []), fresh["lm_fleet"]),
+        "wire.rows": (committed.get("wire", {}).get("rows", []),
+                      fresh["wire"]["rows"]),
         "churn.rows": (committed.get("churn", {}).get("rows", []),
                        fresh["churn"]["rows"]),
         "churn.resume": (committed.get("churn", {}).get("resume", []),

@@ -63,9 +63,11 @@ class Plan:
     objective: str
     pipeline_depth: int
     backend: str
-    profile: Any                  # HierProfile | MultiProfile (native)
+    profile: Any                  # HierProfile | MultiProfile (native;
+    #                               wire-compressed MO/MG when wire != none)
     network: Any                  # Network | StarNetwork (native)
     result: Any                   # SchedulerResult | MultiSchedulerResult
+    wire: str = "none"            # cut-point transfer codec (core/wire.py)
     model: Optional[LayerStack] = None
 
     # ---- the decision ---------------------------------------------------
@@ -161,7 +163,8 @@ class Plan:
         if self.fleet.topology == TRIPLE:
             from repro.core.hybrid_step import (jitted_hybrid_step,
                                                 split_batch)
-            fn = jitted_hybrid_step(stack, sched.m_s, sched.m_l, lr)
+            fn = jitted_hybrid_step(stack, sched.m_s, sched.m_l, lr,
+                                    wire=self.wire)
 
             def step(params, x, y):
                 return fn(params, split_batch(jnp.asarray(x),
@@ -169,7 +172,8 @@ class Plan:
         else:
             from repro.core.hybrid_step import (jitted_multi_hybrid_step,
                                                 multi_split_batch)
-            fn = jitted_multi_hybrid_step(stack, sched.m_s, sched.m_l, lr)
+            fn = jitted_multi_hybrid_step(stack, sched.m_s, sched.m_l, lr,
+                                          wire=self.wire)
 
             def step(params, x, y):
                 return fn(params, multi_split_batch(jnp.asarray(x),
@@ -209,8 +213,8 @@ class Plan:
             total_steps=steps, batch=self.B, lr=lr,
             resched_every=resched_every, ema=ema, seed=seed,
             pipeline_depth=self.pipeline_depth, objective=self.objective,
-            ckpt_dir=ckpt_dir, ckpt_every=ckpt_every, keep=keep,
-            fail_at=fail_at)
+            wire=self.wire, ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+            keep=keep, fail_at=fail_at)
         return _run_loop(cfg, self._require_model(), self.profile,
                          self.network, data, worker_slowdown, log,
                          topology=self.fleet.topology,
@@ -230,7 +234,7 @@ class Plan:
         lines = [
             f"HierTrain plan — model={name}  fleet[{self.fleet.describe()}]",
             f"  batch B={self.B}  objective={self.objective}  "
-            f"backend={self.backend}",
+            f"backend={self.backend}  wire={self.wire}",
             f"  schedule: {s.describe()}",
             f"  cuts: m_s={ms}  m_l={s.m_l}  of N={self.profile.num_layers}"
             f" layers",
@@ -263,6 +267,7 @@ class Plan:
 
 def plan(model, fleet: Fleet, B: int, *, objective: str = "latency",
          pipeline_depth: int = 1, backend: str = "batched",
+         wire: Optional[str] = None,
          prune: bool = True, refine_passes: int = 4,
          keep_log: bool = False,
          warm_start: Optional[Union[Schedule, MultiSchedule]] = None
@@ -281,11 +286,20 @@ def plan(model, fleet: Fleet, B: int, *, objective: str = "latency",
     topology-native schedule, e.g. the live one before a fleet change)
     tightens the dominance prune without changing the result
     (DESIGN.md §10).
+
+    ``wire`` selects the cut-point transfer codec (DESIGN.md §11):
+    ``None`` inherits ``fleet.wire``; ``"int8"`` both *plans with* the
+    compressed ``MO``/``MG`` wire sizes (so Algorithm 1 sees the
+    compressed split-point traffic — optimal cuts legitimately move)
+    and *executes* the matching quantize→dequantize codec in
+    :meth:`Plan.step_fn` / :meth:`Plan.train`.
     """
     if pipeline_depth < 1:
         raise ValueError("pipeline_depth must be >= 1")
+    from repro.core.wire import apply_wire, validate_wire
+    wire = fleet.wire if wire is None else validate_wire(wire)
     stack = as_layerstack(model) if model is not None else None
-    profile = fleet.profile_for(stack)
+    profile = apply_wire(fleet.profile_for(stack), stack, wire)
     net = fleet.network()
     if fleet.topology == TRIPLE:
         result = _scheduler._solve_3w(
@@ -298,7 +312,8 @@ def plan(model, fleet: Fleet, B: int, *, objective: str = "latency",
             warm_start=warm_start)
     return Plan(fleet=fleet, B=B, objective=objective,
                 pipeline_depth=pipeline_depth, backend=backend,
-                profile=profile, network=net, result=result, model=stack)
+                profile=profile, network=net, result=result, wire=wire,
+                model=stack)
 
 
 # ---------------------------------------------------------------------------
@@ -352,11 +367,14 @@ def main(argv=None) -> int:
     ap.add_argument("--pipeline-depth", type=int, default=1)
     ap.add_argument("--topology", choices=("auto", TRIPLE, STAR),
                     default="auto")
+    ap.add_argument("--wire", choices=("none", "int8"), default="none",
+                    help="cut-point transfer codec: int8 plans with and "
+                         "executes compressed activation/gradient wires")
     args = ap.parse_args(argv)
     model, fleet = _cli_model_and_fleet(args.explain, args.m,
                                         args.edge_cloud_mbps, args.topology)
     p = plan(model, fleet, args.batch, objective=args.objective,
-             pipeline_depth=args.pipeline_depth)
+             pipeline_depth=args.pipeline_depth, wire=args.wire)
     print(p.explain())
     print(f"  simulated (DES): {p.simulate():.6g}s")
     return 0

@@ -87,6 +87,11 @@ class Fleet:
 
     Pinned-profile mode (:meth:`from_profile`): ``_profile``/``_network``
     hold a prebuilt profile/network pair and the spec fields are unused.
+
+    ``wire`` is the fleet's default cut-point transfer codec
+    (``"none"`` | ``"int8"``, see :mod:`repro.core.wire`): a property of
+    the deployment's links, not the workload, so it lives here and
+    :func:`repro.api.plan` picks it up (overridable per plan).
     """
     workers: Optional[Dict[str, WorkerSpec]] = None
     device_slowdowns: Tuple[float, ...] = (1.0,)
@@ -94,10 +99,13 @@ class Fleet:
     backhaul_mbps: float = 3.0
     sample_bytes: Optional[float] = None
     topology: str = "auto"
+    wire: str = "none"
     _profile: Optional[Union[HierProfile, MultiProfile]] = None
     _network: Optional[Union[Network, StarNetwork]] = None
 
     def __post_init__(self) -> None:
+        from repro.core.wire import validate_wire
+        validate_wire(self.wire)
         if self.topology == "auto":
             self.topology = TRIPLE if self.num_devices == 1 else STAR
         if self.topology not in (TRIPLE, STAR):
@@ -114,7 +122,7 @@ class Fleet:
     @classmethod
     def from_profile(cls, profile: Union[HierProfile, MultiProfile],
                      net: Union[Network, StarNetwork],
-                     topology: str = "auto") -> "Fleet":
+                     topology: str = "auto", wire: str = "none") -> "Fleet":
         """Wrap an existing profile/network pair (synthetic benchmarks,
         measured profiles, legacy shims).  A :class:`HierProfile` +
         :class:`Network` pair is triple-native; a :class:`MultiProfile` +
@@ -143,12 +151,13 @@ class Fleet:
                     "from_network for a star fleet")
             m = 1
         return cls(device_slowdowns=(1.0,) * m, uplink_mbps=(0.0,) * m,
-                   topology=topology, _profile=profile, _network=net)
+                   topology=topology, wire=wire, _profile=profile,
+                   _network=net)
 
     @classmethod
     def from_table2(cls, model: str = "lenet5", m: int = 1,
                     edge_cloud_mbps: float = 3.0,
-                    topology: str = "auto") -> "Fleet":
+                    topology: str = "auto", wire: str = "none") -> "Fleet":
         """The paper-calibrated CNN testbed (§VI-B) extended to the
         deterministic heterogeneous device fleet of the M-sweeps.
         ``model`` picks the per-model worker calibration
@@ -158,12 +167,14 @@ class Fleet:
         return cls(workers=TABLE2_TESTBEDS[model],
                    device_slowdowns=FLEET_SLOWDOWNS[:m],
                    uplink_mbps=FLEET_UPLINK_MBPS[:m],
-                   backhaul_mbps=edge_cloud_mbps, topology=topology)
+                   backhaul_mbps=edge_cloud_mbps, topology=topology,
+                   wire=wire)
 
     @classmethod
     def lm_default(cls, m: int = 1,
                    backhaul_mbps: float = LM_BACKHAUL_MBPS,
-                   sample_bytes: float = LM_RAW_SAMPLE_BYTES) -> "Fleet":
+                   sample_bytes: float = LM_RAW_SAMPLE_BYTES,
+                   wire: str = "none") -> "Fleet":
         """The LM fleet (DESIGN.md §8): mobile-NPU/edge-GPU/cloud tiers,
         LTE/WiFi-class radios, device-resident ~2 MB raw samples.
         Star-native at every M so sweeps stay internally comparable."""
@@ -172,7 +183,7 @@ class Fleet:
                    device_slowdowns=LM_FLEET_SLOWDOWNS[:m],
                    uplink_mbps=LM_FLEET_UPLINK_MBPS[:m],
                    backhaul_mbps=backhaul_mbps, sample_bytes=sample_bytes,
-                   topology=STAR)
+                   topology=STAR, wire=wire)
 
     # ---- views ----------------------------------------------------------
 
@@ -221,8 +232,9 @@ class Fleet:
 
     def describe(self) -> str:
         m = self.num_devices
+        wire = f", wire={self.wire}" if self.wire != "none" else ""
         if self.pinned:
-            return f"M={m} ({self.topology}; pinned profile/network)"
+            return f"M={m} ({self.topology}; pinned profile/network{wire})"
         ups = "/".join(f"{u:g}" for u in self.uplink_mbps)
         return (f"M={m} ({self.topology}; uplinks {ups} Mbps, "
-                f"backhaul {self.backhaul_mbps:g} Mbps)")
+                f"backhaul {self.backhaul_mbps:g} Mbps{wire})")

@@ -46,6 +46,7 @@ import jax.numpy as jnp
 
 from repro.core.cost_model import MultiSchedule, Schedule
 from repro.core.layerstack import as_layerstack
+from repro.core.wire import wire_act_bytes, wire_codec, wire_grad_bytes
 
 Params = List[Any]
 
@@ -79,16 +80,24 @@ def split_batch(x: jax.Array, y: jax.Array, sched: Schedule
 
 def hybrid_sgd_step(model, params: Params,
                     batches: Dict[str, Tuple[jax.Array, jax.Array]],
-                    m_s: int, m_l: int, lr: float
+                    m_s: int, m_l: int, lr: float, wire: str = "none"
                     ) -> Tuple[Params, jax.Array]:
     """One HierTrain iteration.  Returns (updated params, mean loss).
 
     ``params`` plays the role of the consensus weights each worker starts
     the iteration with (they are equal after every weight-update phase).
+
+    ``wire`` selects the cut-point transfer codec (``repro.core.wire``):
+    ``"int8"`` quantizes the shipped activations forward and — via the
+    codec's custom VJP — the returning activation-gradients backward;
+    ``"none"`` leaves the traced program bit-identical to the seed.  A
+    cut at 0 is a raw-input upload (the ``sample_bytes`` channel), so
+    the codec only touches crossings with ``m > 0``.
     """
     stack = as_layerstack(model)
     N = stack.num_layers
     assert 0 <= m_s <= m_l <= N
+    codec = wire_codec(wire)
     x_o, y_o = batches["o"]
     x_s, y_s = batches["s"]
     x_l, y_l = batches["l"]
@@ -104,6 +113,10 @@ def hybrid_sgd_step(model, params: Params,
         # --- forward phase (Fig. 4 routing) ---
         h_s = stack.apply_segment(p_s, x_s, 0, m_s) if b_s else None
         h_l = stack.apply_segment(p_l, x_l, 0, m_l) if b_l else None
+        if codec is not None and h_s is not None and m_s > 0:
+            h_s = codec(h_s)
+        if codec is not None and h_l is not None and m_l > 0:
+            h_l = codec(h_l)
         a_o = stack.apply_segment(p_o, x_o, 0, m_s)
         # worker_o continues its own + s's samples through m_s+1..m_l.
         mid_in = a_o if h_s is None else jnp.concatenate([a_o, h_s], axis=0)
@@ -133,9 +146,10 @@ def hybrid_sgd_step(model, params: Params,
 
 def hybrid_step_from_schedule(model, params: Params,
                               x: jax.Array, y: jax.Array, sched: Schedule,
-                              lr: float) -> Tuple[Params, jax.Array]:
+                              lr: float, wire: str = "none"
+                              ) -> Tuple[Params, jax.Array]:
     return hybrid_sgd_step(model, params, split_batch(x, y, sched),
-                           sched.m_s, sched.m_l, lr)
+                           sched.m_s, sched.m_l, lr, wire=wire)
 
 
 # ---------------------------------------------------------------------------
@@ -166,16 +180,19 @@ def multi_split_batch(x: jax.Array, y: jax.Array, sched: MultiSchedule
 
 def multi_hybrid_sgd_step(model, params: Params,
                           batches: Dict[str, object],
-                          m_s: Sequence[int], m_l: int, lr: float
+                          m_s: Sequence[int], m_l: int, lr: float,
+                          wire: str = "none"
                           ) -> Tuple[Params, jax.Array]:
     """One M-stream HierTrain iteration.  Returns (updated params, mean
     loss).  Exact batch-``B`` SGD semantics: per-stream gradients are
     per-sample sums, aggregated over every copy of each frontend layer and
     scaled once by ``1/B``.  With ``M = 1`` and the same schedule this
-    traces the identical program to :func:`hybrid_sgd_step`.
+    traces the identical program to :func:`hybrid_sgd_step` (including
+    the ``wire`` codec, applied per arriving stream at its cut).
     """
     stack = as_layerstack(model)
     N = stack.num_layers
+    codec = wire_codec(wire)
     m_s = tuple(int(m) for m in m_s)
     M = len(m_s)
     x_o, y_o = batches["o"]
@@ -201,6 +218,11 @@ def multi_hybrid_sgd_step(model, params: Params,
         h = [stack.apply_segment(p_s[i], s_streams[i][0], 0, m_s[i])
              if b_s[i] else None for i in range(M)]
         h_l = stack.apply_segment(p_l, x_l, 0, m_l) if b_l else None
+        if codec is not None:
+            h = [codec(h[i]) if h[i] is not None and m_s[i] > 0 else h[i]
+                 for i in range(M)]
+            if h_l is not None and m_l > 0:
+                h_l = codec(h_l)
         # worker_o walks its segment list, merging arrivals at their cuts.
         cur = x_o
         prev = 0
@@ -236,11 +258,12 @@ def multi_hybrid_sgd_step(model, params: Params,
 
 def multi_hybrid_step_from_schedule(model, params: Params,
                                     x: jax.Array, y: jax.Array,
-                                    sched: MultiSchedule, lr: float
+                                    sched: MultiSchedule, lr: float,
+                                    wire: str = "none"
                                     ) -> Tuple[Params, jax.Array]:
     return multi_hybrid_sgd_step(model, params, multi_split_batch(x, y,
                                                                   sched),
-                                 sched.m_s, sched.m_l, lr)
+                                 sched.m_s, sched.m_l, lr, wire=wire)
 
 
 # ---------------------------------------------------------------------------
@@ -315,33 +338,36 @@ def _cached_step(key: Tuple, model, make: Callable[[], Callable]
     return fn
 
 
-def jitted_hybrid_step(model, m_s: int, m_l: int, lr: float) -> Callable:
+def jitted_hybrid_step(model, m_s: int, m_l: int, lr: float,
+                       wire: str = "none") -> Callable:
     """A compiled ``(params, batches) -> (new_params, loss)`` hybrid step
-    with static ``(m_s, m_l, lr)`` and donated ``params``.  jax.jit still
-    specializes on the batch-split shapes at first call, so one compiled
-    step serves every iteration with the same schedule."""
-    key = ("hybrid", id(model), int(m_s), int(m_l), float(lr))
+    with static ``(m_s, m_l, lr, wire)`` and donated ``params``.  jax.jit
+    still specializes on the batch-split shapes at first call, so one
+    compiled step serves every iteration with the same schedule."""
+    key = ("hybrid", id(model), int(m_s), int(m_l), float(lr), str(wire))
 
     def make():
         def step(params: Params, batches):
-            return hybrid_sgd_step(model, params, batches, m_s, m_l, lr)
+            return hybrid_sgd_step(model, params, batches, m_s, m_l, lr,
+                                   wire=wire)
         return jax.jit(step, donate_argnums=0)
     return _cached_step(key, model, make)
 
 
 def jitted_multi_hybrid_step(model, m_s: Sequence[int],
-                             m_l: int, lr: float) -> Callable:
+                             m_l: int, lr: float,
+                             wire: str = "none") -> Callable:
     """Compiled ``(params, batches) -> (new_params, loss)`` M-stream hybrid
-    step; the cut tuple ``(m_s, m_l)`` and ``lr`` are static, ``params`` is
-    donated, and executables are cached per cut tuple like
+    step; the cut tuple ``(m_s, m_l)``, ``lr`` and ``wire`` are static,
+    ``params`` is donated, and executables are cached per cut tuple like
     :func:`jitted_hybrid_step`."""
     cuts = tuple(int(m) for m in m_s)
-    key = ("multi", id(model), cuts, int(m_l), float(lr))
+    key = ("multi", id(model), cuts, int(m_l), float(lr), str(wire))
 
     def make():
         def step(params: Params, batches):
             return multi_hybrid_sgd_step(model, params, batches, cuts,
-                                         m_l, lr)
+                                         m_l, lr, wire=wire)
         return jax.jit(step, donate_argnums=0)
     return _cached_step(key, model, make)
 
@@ -377,7 +403,13 @@ class TrafficReport:
 
 
 def traffic(model, sched: Schedule, sample_bytes: float,
-            origin: str = "device") -> TrafficReport:
+            origin: str = "device", wire: str = "none") -> TrafficReport:
+    """Bytes one iteration moves across worker boundaries.  The
+    activation channel is wire-aware and honors asymmetric fwd/bwd
+    dtypes: forward bytes come from ``act_bytes``/``act_elems`` and
+    backward bytes from ``grad_bytes``/``grad_elems`` independently, so
+    a bf16-fwd/f32-bwd cut is never double-counted at a shared width —
+    matching the DES transfer sizes (``MO``/``MG``) term for term."""
     stack = as_layerstack(model)
     metas = stack.cut_meta()
     inp = sum(b * sample_bytes for b, w in
@@ -386,10 +418,12 @@ def traffic(model, sched: Schedule, sample_bytes: float,
     act = 0.0
     if sched.m_s > 0 and sched.b_s > 0 and sched.worker_s != sched.worker_o:
         m = metas[sched.m_s - 1]
-        act += sched.b_s * (m.act_bytes + m.resolved_grad_bytes)
+        act += sched.b_s * (wire_act_bytes(m, wire) +
+                            wire_grad_bytes(m, wire))
     if sched.m_l > 0 and sched.b_l > 0 and sched.worker_l != sched.worker_o:
         m = metas[sched.m_l - 1]
-        act += sched.b_l * (m.act_bytes + m.resolved_grad_bytes)
+        act += sched.b_l * (wire_act_bytes(m, wire) +
+                            wire_grad_bytes(m, wire))
     wg = 0.0
     if sched.b_s > 0 and sched.worker_s != sched.worker_o:
         wg += 2.0 * sum(m.resolved_param_bytes for m in metas[:sched.m_s])

@@ -55,6 +55,13 @@ class CutMeta:
       means "equal to ``act_bytes``", the paper's §IV-C assumption.  LM
       stacks override it: bf16 activations go forward but f32 gradients
       come back.
+
+    ``act_elems`` / ``grad_elems`` are the per-sample *element counts*
+    of the two crossing tensors — what wire compression operates on
+    (``repro.core.wire``): an int8 wire ships ``elems + 4`` bytes/sample
+    regardless of the source dtype, so the fwd and bwd directions must
+    be counted from their own dtypes, not a shared one.  ``None`` means
+    "f32 payload" (the seed CNN behaviour): ``bytes / 4``.
     """
     name: str
     param_count: int
@@ -63,6 +70,8 @@ class CutMeta:
     flops_bwd: Optional[float] = None
     param_bytes: Optional[float] = None
     grad_bytes: Optional[float] = None
+    act_elems: Optional[float] = None
+    grad_elems: Optional[float] = None
 
     @property
     def resolved_param_bytes(self) -> float:
@@ -73,6 +82,16 @@ class CutMeta:
     def resolved_grad_bytes(self) -> float:
         return float(self.act_bytes) if self.grad_bytes is None \
             else float(self.grad_bytes)
+
+    @property
+    def resolved_act_elems(self) -> float:
+        return float(self.act_bytes) / 4.0 if self.act_elems is None \
+            else float(self.act_elems)
+
+    @property
+    def resolved_grad_elems(self) -> float:
+        return self.resolved_grad_bytes / 4.0 if self.grad_elems is None \
+            else float(self.grad_elems)
 
 
 class LayerStack:

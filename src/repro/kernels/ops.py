@@ -194,3 +194,19 @@ def quantize_int8(x: jax.Array, key: jax.Array, *,
 
 def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
     return iq.dequantize_int8(q, scale)
+
+
+def wire_qdq_int8(x: jax.Array, *,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """Deterministic int8 wire round trip: per-*sample* rows (leading
+    axis), absmax scaling, round-to-nearest (the stochastic-rounding
+    noise pinned at 0.5, keeping compiled hybrid steps pure).  Returns
+    the dequantized tensor in ``x``'s shape and dtype — exactly what the
+    receiving worker reconstructs from ``elems + 4`` wire bytes/sample
+    (see :mod:`repro.core.wire`)."""
+    interp = _interpret() if interpret is None else interpret
+    b = x.shape[0]
+    flat = x.reshape(b, -1)
+    noise = jnp.full(flat.shape, 0.5, jnp.float32)
+    q, scale = iq.quantize_int8(flat, noise, interpret=interp)
+    return iq.dequantize_int8(q, scale).reshape(x.shape).astype(x.dtype)

@@ -238,8 +238,20 @@ class LMLayerStack(LayerStack):
     """
     cfg: LMConfig
     seq_len: int
+    backend: str = "ref"
 
     def __post_init__(self) -> None:
+        if self.backend not in ("ref", "pallas"):
+            raise ValueError(f"unknown backend {self.backend!r}; pick "
+                             f"'ref' or 'pallas'")
+        if self.backend == "pallas":
+            # Route apply_segment's attention blocks onto the Pallas
+            # flash-attention kernel and the mamba2/mLSTM blocks onto the
+            # chunked GLA scan (kernels/ops.py; interpret mode off-TPU).
+            # Analytic cut meta is backend-independent, so profiles and
+            # schedules are identical — only kernel numerics differ,
+            # within the oracle suite's pinned tolerance.
+            self.cfg = self.cfg.variant(use_flash=True, use_gla_kernel=True)
         self._plan = _block_plan(self.cfg)
 
     @property
@@ -259,8 +271,9 @@ class LMLayerStack(LayerStack):
     def cut_meta(self) -> List[CutMeta]:
         cfg, T = self.cfg, self.seq_len
         act_elem = jnp.dtype(cfg.dtype).itemsize
-        hid_act = float(T * cfg.d_model * act_elem)
-        hid_grad = float(T * cfg.d_model * 4)          # f32 gradient wire
+        hid_elems = float(T * cfg.d_model)
+        hid_act = hid_elems * act_elem
+        hid_grad = hid_elems * 4                       # f32 gradient wire
         metas: List[CutMeta] = []
         counts = {k: 0 for k in ("attn", "moe", "mamba2", "mlstm", "slstm")}
         for spec in self._plan:
@@ -269,6 +282,7 @@ class LMLayerStack(LayerStack):
                     name="embed", param_count=cfg.vocab * cfg.d_model,
                     flops_fwd=0.0, flops_bwd=0.0,
                     act_bytes=hid_act, grad_bytes=hid_grad,
+                    act_elems=hid_elems, grad_elems=hid_elems,
                     param_bytes=float(cfg.vocab * cfg.d_model * act_elem)))
                 continue
             if spec.kind == "head":
@@ -279,6 +293,8 @@ class LMLayerStack(LayerStack):
                     flops_bwd=2.0 * flops,
                     act_bytes=float(T * cfg.vocab * act_elem),
                     grad_bytes=float(T * cfg.vocab * 4),
+                    act_elems=float(T * cfg.vocab),
+                    grad_elems=float(T * cfg.vocab),
                     param_bytes=float(p * act_elem)))
                 continue
             if spec.kind == "attn":
@@ -300,6 +316,7 @@ class LMLayerStack(LayerStack):
                 name=f"{spec.kind}{counts[spec.kind]}", param_count=p,
                 flops_fwd=flops, flops_bwd=2.0 * flops,
                 act_bytes=hid_act, grad_bytes=hid_grad,
+                act_elems=hid_elems, grad_elems=hid_elems,
                 param_bytes=float(p * act_elem)))
         return metas
 
@@ -380,9 +397,16 @@ class LMLayerStack(LayerStack):
         return x, y
 
 
-def lm_layerstack(cfg: LMConfig, seq_len: int) -> LMLayerStack:
-    """Build the LayerStack adapter over ``cfg``'s block stack."""
-    return LMLayerStack(cfg=cfg, seq_len=seq_len)
+def lm_layerstack(cfg: LMConfig, seq_len: int,
+                  backend: str = "ref") -> LMLayerStack:
+    """Build the LayerStack adapter over ``cfg``'s block stack.
+
+    ``backend="pallas"`` routes attention blocks onto
+    ``kernels/flash_attention.py`` and GLA-family blocks (mamba2/mLSTM)
+    onto ``kernels/gla_scan.py``; ``"ref"`` (default) keeps the pure-jnp
+    reference path that ``kernels/ref.py``-style oracles pin.  Profiles
+    and schedules are backend-independent."""
+    return LMLayerStack(cfg=cfg, seq_len=seq_len, backend=backend)
 
 
 # ---------------------------------------------------------------------------

@@ -103,6 +103,9 @@ class HierLoopConfig:
     pipeline_depth: int = 1           # K minibatches in flight (§7); 1 =
     #                                   barrier-per-iteration execution
     objective: str = "latency"        # scheduler objective (§7)
+    wire: str = "none"                # cut-point transfer codec (§11);
+    #                                   the caller's profile must carry
+    #                                   matching (compressed) MO/MG
     ckpt_dir: Optional[str] = None    # crash-safe resume (DESIGN.md §10)
     ckpt_every: int = 50
     keep: int = 3
@@ -201,7 +204,7 @@ def _loop_ops(topology: str, model, profile, net, cfg: "HierLoopConfig"):
             fill=lambda p, s: _t_total(p, net, s).total,
             period=lambda p, s: t_period(p, net, s),
             step_fn=lambda s: jitted_hybrid_step(model, s.m_s, s.m_l,
-                                                 cfg.lr),
+                                                 cfg.lr, wire=cfg.wire),
             split=split_batch,
             hist=lambda s: {"m_s": s.m_s, "m_l": s.m_l,
                             "b": (s.b_o, s.b_s, s.b_l)},
@@ -222,7 +225,7 @@ def _loop_ops(topology: str, model, profile, net, cfg: "HierLoopConfig"):
         fill=lambda p, s: _t_total_multi(p, net, s).total,
         period=lambda p, s: t_period_multi(p, net, s),
         step_fn=lambda s: jitted_multi_hybrid_step(model, s.m_s, s.m_l,
-                                                   cfg.lr),
+                                                   cfg.lr, wire=cfg.wire),
         split=multi_split_batch,
         hist=lambda s: {"m_s": s.m_s, "m_l": s.m_l,
                         "b": (s.b_o, *s.b_s, s.b_l)},

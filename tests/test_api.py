@@ -495,7 +495,7 @@ def test_plan_argument_errors():
 EXPLAIN_SNAPSHOT = """\
 HierTrain plan — model=lenet5  fleet[M=1 (triple; uplinks 5 Mbps, \
 backhaul 3 Mbps)]
-  batch B=32  objective=latency  backend=batched
+  batch B=32  objective=latency  backend=batched  wire=none
   schedule: o=device(b=32) s=edge(m=0,b=0) l=cloud(m=0,b=0)
   cuts: m_s=0  m_l=0  of N=5 layers
   predicted: T_total=0.0951891s  T_period=0.0951891s

@@ -239,8 +239,8 @@ def test_jit_cache_is_bounded_and_evicts_lru(monkeypatch):
     # entry was just touched)
     hs.jitted_hybrid_step(model, 3, 3, 0.1)
     assert len(hs._JIT_CACHE) == 3
-    assert ("hybrid", id(model), 1, 1, 0.1) not in hs._JIT_CACHE
-    assert ("hybrid", id(model), 0, 0, 0.1) in hs._JIT_CACHE
+    assert ("hybrid", id(model), 1, 1, 0.1, "none") not in hs._JIT_CACHE
+    assert ("hybrid", id(model), 0, 0, 0.1, "none") in hs._JIT_CACHE
 
 
 def test_jit_cache_releases_model_on_eviction(monkeypatch):
