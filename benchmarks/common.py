@@ -33,12 +33,12 @@ def cnn_model(model_name: str):
 
 
 def table2_fleet(model_name: str, edge_cloud_mbps: float, m: int = 1,
-                 topology: str = "auto") -> Fleet:
+                 topology: str = "auto", n_edges: int = 1) -> Fleet:
     """The paper-calibrated testbed as a :class:`Fleet` (the benchmark
     front door; figures plan through ``repro.api`` against it)."""
     return Fleet.from_table2(model=model_name, m=m,
                              edge_cloud_mbps=edge_cloud_mbps,
-                             topology=topology)
+                             topology=topology, n_edges=n_edges)
 
 
 def paper_profile(model_name: str) -> HierProfile:

@@ -1,0 +1,94 @@
+"""Multi-edge tree sweep (beyond the paper — DESIGN.md §12).
+
+The M-device star benchmark (``fig_multidevice``) keeps every device
+behind one edge server.  This sweep partitions the same heterogeneous
+fleets across E ∈ {1, 2, 4} edge servers, each with its own backhaul to
+one cloud, and lets the tree scheduler assign per-edge cuts.  Per
+(model, E) it records the generalized Algorithm-1 search cost, the
+predicted ``T_total`` against the DES makespan (model validity at
+E > 1), and the speedup over the best single-edge star plan of the same
+fleet (the E=1 row — partitioning can also *lose* when it pushes
+same-cut streams behind foreign backhauls, which the lenet5 rows show
+honestly).
+
+Planned through ``repro.api`` on tree-native fleets (``topology="tree"``
+even at E = 1, so the whole sweep runs one stack; the E = 1 plan is
+bit-identical to the star plan by the nativity-reduction tests).
+
+``python -m benchmarks.fig_tree`` prints the table;
+``benchmarks/run.py --json`` folds :func:`run_json` into
+``BENCH_sched.json`` with each record stamped with (model, M, E).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from benchmarks.common import BATCH, cnn_model, table, table2_fleet
+from repro.api import Fleet, plan
+
+SWEEP_E = (1, 2, 4)
+# (model, M): lenet5 uses the full 8-straggler fleet, alexnet the first 4.
+CONFIGS = (("lenet5", 8), ("alexnet", 4))
+EDGE_CLOUD_MBPS = 2.0
+
+
+def measure() -> List[Dict]:
+    rows: List[Dict] = []
+    for model_name, m in CONFIGS:
+        B = BATCH[model_name]
+        model = cnn_model(model_name)
+        star_t = None
+        for e in SWEEP_E:
+            spec = table2_fleet(model_name, EDGE_CLOUD_MBPS, m=m,
+                                topology="tree", n_edges=e)
+            # Pin the profile outside the timer so sched_s measures the
+            # per-edge Algorithm-1 search alone (comparable with the
+            # fig_multidevice records; profiling is not tracked).
+            fleet = Fleet.from_profile(spec.profile_for(model),
+                                       spec.network())
+            t0 = time.perf_counter()
+            p = plan(model, fleet, B)
+            dt = time.perf_counter() - t0
+            res = p.result
+            sim = p.simulate()
+            if e == 1:
+                star_t = res.t_total       # the best single-edge star plan
+            rows.append({
+                "model": model_name,
+                "M": m,
+                "E": e,
+                "sched_s": dt,
+                "lps_solved": res.n_lp_solved,
+                "candidates": res.n_candidates,
+                "pruned": res.n_pruned,
+                "t_total": res.t_total,
+                "t_sim": sim,
+                "sim_rel_err": abs(sim - res.t_total) / res.t_total,
+                "speedup_vs_star": star_t / res.t_total,
+                "schedule": res.schedule.describe(),
+            })
+    return rows
+
+
+def run() -> str:
+    rows = measure()
+    out = table(rows, ["model", "M", "E", "sched_s", "lps_solved",
+                       "pruned", "t_total", "t_sim", "sim_rel_err",
+                       "speedup_vs_star"],
+                f"multi-edge tree sweep — backhaul {EDGE_CLOUD_MBPS} Mbps "
+                f"per edge, heterogeneous fleets")
+    sched_lines = "\n".join(
+        f"  {r['model']} E={r['E']}: {r['schedule']}" for r in rows)
+    return f"{out}\n\nchosen schedules:\n{sched_lines}"
+
+
+def run_json() -> List[Dict]:
+    """Rows for the ``tree`` section of ``BENCH_sched.json``; every record
+    carries its fleet (model, M) and edge count E (the sweep dimensions)
+    and its chosen schedule (covered by the CI drift check)."""
+    return measure()
+
+
+if __name__ == "__main__":
+    print(run())

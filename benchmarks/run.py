@@ -4,7 +4,8 @@ roofline report if dry-run results exist.  ``python -m benchmarks.run``.
 ``--json [PATH]`` switches to perf-tracking mode: instead of printing every
 section it re-times the Table II scheduler search with both backends
 (reference scalar simplex vs batched engine) plus the M-device sweep
-(``benchmarks/fig_multidevice``), the pipelined steady-state sweep
+(``benchmarks/fig_multidevice``), the multi-edge tree sweep
+(``benchmarks/fig_tree``), the pipelined steady-state sweep
 (``benchmarks/fig_pipeline``), the LM-fleet LayerStack sweep
 (``benchmarks/fig_lm_fleet``), the elastic-fleet churn benchmark
 (``benchmarks/fig_churn``) and the wire-compression sweep
@@ -35,6 +36,9 @@ _DET_KEYS = {
                     "lps_refine", "refine_rounds", "t_total", "t_sim",
                     "sim_rel_err", "speedup_all_edge", "speedup_all_cloud",
                     "schedule"),
+    "tree.rows": ("model", "M", "E", "lps_solved", "candidates", "pruned",
+                  "t_total", "t_sim", "sim_rel_err", "speedup_vs_star",
+                  "schedule"),
     "pipeline.table2": ("network", "layers", "M", "pipeline_depth",
                         "t_total_lat", "t_period_lat", "t_period_thr",
                         "t_period_des", "period_rel_err", "bottleneck",
@@ -66,7 +70,7 @@ def run_sections() -> int:
     from benchmarks import (fig6_model_validity, fig7_8_speedup,
                             fig9_10_sota, fig11_edge_cpu, fig_churn,
                             fig_lm_fleet, fig_multidevice, fig_pipeline,
-                            fig_wire, roofline_report,
+                            fig_tree, fig_wire, roofline_report,
                             table2_sched_runtime)
     sections = [
         ("Fig.6 model validity", fig6_model_validity.run),
@@ -75,6 +79,7 @@ def run_sections() -> int:
         ("Fig.11 edge CPU scaling", fig11_edge_cpu.run),
         ("Table II scheduler runtime", table2_sched_runtime.run),
         ("M-device sweep (beyond the paper)", fig_multidevice.run),
+        ("Multi-edge tree sweep (beyond the paper)", fig_tree.run),
         ("Pipelined steady state (T_period)", fig_pipeline.run),
         ("LM fleet via LayerStack (beyond the paper)", fig_lm_fleet.run),
         ("Elastic fleet churn (beyond the paper)", fig_churn.run),
@@ -98,9 +103,10 @@ def run_sections() -> int:
 
 def _build_payload(include_reference: bool = True) -> dict:
     from benchmarks import fig_churn, fig_lm_fleet, fig_multidevice, \
-        fig_pipeline, fig_wire, table2_sched_runtime
+        fig_pipeline, fig_tree, fig_wire, table2_sched_runtime
     payload = table2_sched_runtime.run_json(include_reference)
     payload["multidevice"] = fig_multidevice.run_json()
+    payload["tree"] = {"rows": fig_tree.run_json()}
     payload["pipeline"] = fig_pipeline.run_json()
     payload["lm_fleet"] = fig_lm_fleet.run_json()
     payload["churn"] = fig_churn.run_json()
@@ -130,6 +136,11 @@ def run_sched_json(path: str) -> int:
               f"(rel err {r['sim_rel_err']:.1%}) "
               f"speedup vs all-edge {r['speedup_all_edge']:.2f}x "
               f"/ all-cloud {r['speedup_all_cloud']:.2f}x")
+    for r in payload["tree"]["rows"]:
+        print(f"  tree {r['model']:>7} E={r['E']}: sched "
+              f"{r['sched_s']*1e3:.0f}ms T_total {r['t_total']:.3f}s "
+              f"sim {r['t_sim']:.3f}s (rel err {r['sim_rel_err']:.1%}) "
+              f"speedup vs star {r['speedup_vs_star']:.2f}x")
     for r in payload["pipeline"]["fleet"]:
         print(f"  pipeline M={r['M']}: T_period latency-opt "
               f"{r['t_period_lat']:.3f}s -> throughput-opt "
@@ -180,6 +191,8 @@ def check_schedules(path: str) -> int:
         "rows": (committed.get("rows", []), fresh["rows"]),
         "multidevice": (committed.get("multidevice", []),
                         fresh["multidevice"]),
+        "tree.rows": (committed.get("tree", {}).get("rows", []),
+                      fresh["tree"]["rows"]),
         "pipeline.table2": (committed.get("pipeline", {}).get("table2", []),
                             fresh["pipeline"]["table2"]),
         "pipeline.fleet": (committed.get("pipeline", {}).get("fleet", []),

@@ -41,7 +41,7 @@ from repro.core import scheduler as _scheduler
 from repro.core import simulator as _simulator
 from repro.core.cost_model import (Breakdown, MultiSchedule, Schedule,
                                    _t_total_multi)
-from repro.core.fleet import STAR, TRIPLE, Fleet
+from repro.core.fleet import STAR, TREE, TRIPLE, Fleet
 from repro.core.layerstack import LayerStack, as_layerstack
 
 __all__ = ["Fleet", "Plan", "plan", "as_layerstack"]
@@ -135,12 +135,14 @@ class Plan:
                               tier).t_total
         prof = self.profile
         names = prof.worker_names
-        M = prof.num_devices
+        S = prof.num_streams
         wo = tier if tier in ("edge", "cloud") else names[0]
+        if wo == "edge" and wo not in names:    # tree: edge_0.. at E >= 2
+            wo = names[prof.num_devices]
         rest = [w for w in names if w != wo]
         sched = MultiSchedule(worker_o=wo, worker_l=rest[-1],
-                              s_workers=tuple(rest[:-1]), m_s=(0,) * M,
-                              m_l=0, b_o=self.B, b_s=(0,) * M, b_l=0)
+                              s_workers=tuple(rest[:-1]), m_s=(0,) * S,
+                              m_l=0, b_o=self.B, b_s=(0,) * S, b_l=0)
         return _t_total_multi(prof, self.network, sched).total
 
     # ---- execution ------------------------------------------------------
@@ -152,14 +154,31 @@ class Plan:
                 "fleet); pass a model/LayerStack to plan() to execute")
         return self.model
 
-    def step_fn(self, lr: float = 0.05) -> Callable:
+    def stream_edges(self) -> tuple:
+        """Per-TASK-S-stream hosting edge (tree fleets): a device stream
+        sits under its radio's edge, an edge's own stream under itself,
+        and a cloud-hosted stream merges with the front group (index 0 —
+        on an E=1 tree every stream maps to edge 0, which is what keeps
+        the traced step identical to the star's)."""
+        from repro.core.hybrid_step import tree_stream_edges
+        return tree_stream_edges(self.profile, self.network,
+                                 self.multi_schedule)
+
+    def step_fn(self, lr: float = 0.05, cloud_mesh=None) -> Callable:
         """A compiled ``(params, x, y) -> (new_params, loss)`` hybrid-SGD
         step for the chosen schedule (exact batch-B SGD semantics;
-        ``params`` donated, executables cached per cut tuple)."""
+        ``params`` donated, executables cached per cut tuple).
+
+        ``cloud_mesh`` (tree fleets only) runs the cloud tail segment
+        data-parallel over the mesh's dp axes via ``shard_map``
+        (DESIGN.md §12); the batch must divide by the dp shard count."""
         import jax.numpy as jnp
 
         stack = self._require_model()
         sched = self.schedule
+        if cloud_mesh is not None and self.fleet.topology != TREE:
+            raise ValueError("cloud_mesh is a tree-topology option; this "
+                             f"plan's fleet is {self.fleet.topology!r}")
         if self.fleet.topology == TRIPLE:
             from repro.core.hybrid_step import (jitted_hybrid_step,
                                                 split_batch)
@@ -169,6 +188,17 @@ class Plan:
             def step(params, x, y):
                 return fn(params, split_batch(jnp.asarray(x),
                                               jnp.asarray(y), sched))
+        elif self.fleet.topology == TREE:
+            from repro.core.hybrid_step import (jitted_tree_hybrid_step,
+                                                multi_split_batch)
+            fn = jitted_tree_hybrid_step(stack, sched.m_s, sched.m_l, lr,
+                                         wire=self.wire,
+                                         stream_edge=self.stream_edges(),
+                                         cloud_mesh=cloud_mesh)
+
+            def step(params, x, y):
+                return fn(params, multi_split_batch(jnp.asarray(x),
+                                                    jnp.asarray(y), sched))
         else:
             from repro.core.hybrid_step import (jitted_multi_hybrid_step,
                                                 multi_split_batch)
@@ -200,8 +230,8 @@ class Plan:
         final_schedule, resumed_from, churn_log}``.
 
         ``churn`` — a :class:`repro.core.churn.ChurnTrace` of membership
-        events for elastic star fleets (DESIGN.md §10); raises on
-        ``topology="triple"``.  ``ckpt_dir``/``ckpt_every``/``keep``
+        events for elastic star fleets (DESIGN.md §10); raises
+        ``NotImplementedError`` naming the topology on any other fleet.  ``ckpt_dir``/``ckpt_every``/``keep``
         enable atomic keep-N checkpointing and crash-safe resume: rerun
         the same call after a crash and the loop restores the newest
         checkpoint and continues, bitwise equal to an uninterrupted run.
@@ -209,6 +239,11 @@ class Plan:
         four default off — the loop is then bit-identical to its
         pre-elastic behaviour."""
         from repro.train.loop import HierLoopConfig, _run_loop
+        if churn is not None and self.fleet.topology != STAR:
+            raise NotImplementedError(
+                "churn (elastic membership) is only implemented for the "
+                f"star topology; this plan's fleet is "
+                f"topology={self.fleet.topology!r}")
         cfg = HierLoopConfig(
             total_steps=steps, batch=self.B, lr=lr,
             resched_every=resched_every, ema=ema, seed=seed,
@@ -323,7 +358,8 @@ def plan(model, fleet: Fleet, B: int, *, objective: str = "latency",
 _CLI_CONFIGS = ("lenet5", "alexnet", "lm")
 
 
-def _cli_model_and_fleet(config: str, m: int, edge_cloud_mbps, topology):
+def _cli_model_and_fleet(config: str, m: int, edge_cloud_mbps, topology,
+                         n_edges: int = 1):
     if config in ("lenet5", "alexnet"):
         from repro.models import cnn
         model = getattr(cnn, config)()
@@ -331,7 +367,7 @@ def _cli_model_and_fleet(config: str, m: int, edge_cloud_mbps, topology):
             model=config, m=m,
             edge_cloud_mbps=3.0 if edge_cloud_mbps is None
             else edge_cloud_mbps,
-            topology=topology)
+            topology=topology, n_edges=n_edges)
     if config == "lm":
         if topology == TRIPLE:
             raise SystemExit("the lm fleet is star-native; drop "
@@ -365,14 +401,18 @@ def main(argv=None) -> int:
                          "CNN testbeds, 200 Mbps for the lm fleet)")
     ap.add_argument("--objective", choices=OBJECTIVES, default="latency")
     ap.add_argument("--pipeline-depth", type=int, default=1)
-    ap.add_argument("--topology", choices=("auto", TRIPLE, STAR),
+    ap.add_argument("--topology", choices=("auto", TRIPLE, STAR, TREE),
                     default="auto")
+    ap.add_argument("--edges", type=int, default=1,
+                    help="edge-server count (tree topology; devices are "
+                         "partitioned contiguously)")
     ap.add_argument("--wire", choices=("none", "int8"), default="none",
                     help="cut-point transfer codec: int8 plans with and "
                          "executes compressed activation/gradient wires")
     args = ap.parse_args(argv)
     model, fleet = _cli_model_and_fleet(args.explain, args.m,
-                                        args.edge_cloud_mbps, args.topology)
+                                        args.edge_cloud_mbps, args.topology,
+                                        n_edges=args.edges)
     p = plan(model, fleet, args.batch, objective=args.objective,
              pipeline_depth=args.pipeline_depth, wire=args.wire)
     print(p.explain())

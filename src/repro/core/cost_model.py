@@ -301,11 +301,18 @@ class MultiProfile:
         self.MG = self.MO if self.MG is None \
             else np.asarray(self.MG, np.float64)
         n, w = self.num_layers, self.num_workers
-        assert w >= 3 and self.worker_names[-2:] == ("edge", "cloud")
-        assert len(set(self.worker_names)) == w, "duplicate worker name"
+        if len(set(self.worker_names)) != w:
+            dupes = sorted({x for x in self.worker_names
+                            if self.worker_names.count(x) > 1})
+            raise ValueError(f"duplicate worker names in fleet: {dupes}")
+        self._check_names()
         assert self.L_f.shape == (w, n) and self.L_b.shape == (w, n)
         assert self.L_u.shape == (w, n) and self.MP.shape == (n,)
         assert self.MO.shape == (n,) and self.MG.shape == (n,)
+
+    def _check_names(self) -> None:
+        assert self.num_workers >= 3 and \
+            self.worker_names[-2:] == ("edge", "cloud")
 
     @property
     def num_layers(self) -> int:
@@ -317,6 +324,14 @@ class MultiProfile:
 
     @property
     def num_devices(self) -> int:
+        return self.num_workers - 2
+
+    @property
+    def num_streams(self) -> int:
+        """How many TASK-S streams a schedule on this profile carries:
+        every worker that is neither ``worker_o`` nor ``worker_l``.  On a
+        star this equals ``num_devices``; on a tree it is ``M + E - 1``
+        (idle edges still hold a — possibly empty — stream slot)."""
         return self.num_workers - 2
 
     @property
@@ -428,6 +443,85 @@ class MultiProfile:
 
 
 @dataclasses.dataclass
+class TreeProfile(MultiProfile):
+    """Profiling-stage output for the two-level tree topology
+    (DESIGN.md §12): ``M`` device rows, then ``n_edges`` edge rows, then
+    one ``"cloud"`` row.
+
+    The single edge is named ``"edge"`` at ``E = 1`` — the exact star
+    naming, which is what makes E=1 tree DES traces (whose pipe names
+    embed worker names) bit-identical to the star's — and
+    ``edge_0..edge_{E-1}`` otherwise.  ``cloud_speedup`` records the
+    data-parallel speedup baked into the cloud row by
+    :meth:`from_multi` (a ``cloud_speedup``-way sharded cloud tier runs
+    its segment that much faster); at the default 1.0 the row is
+    bit-identical to the star's.
+    """
+    n_edges: int = 1
+    cloud_speedup: float = 1.0
+
+    def _check_names(self) -> None:
+        assert self.n_edges >= 1 and \
+            self.num_workers >= self.n_edges + 2, "need >= 1 device"
+        assert self.worker_names[-1] == "cloud"
+        want = ("edge",) if self.n_edges == 1 else \
+            tuple(f"edge_{i}" for i in range(self.n_edges))
+        assert self.worker_names[-1 - self.n_edges:-1] == want, \
+            f"edge rows must be named {want}"
+
+    @property
+    def num_devices(self) -> int:
+        return self.num_workers - self.n_edges - 1
+
+    @property
+    def device_names(self) -> Tuple[str, ...]:
+        return self.worker_names[:self.num_devices]
+
+    @property
+    def edge_names(self) -> Tuple[str, ...]:
+        return self.worker_names[self.num_devices:-1]
+
+    @classmethod
+    def from_multi(cls, profile: MultiProfile, n_edges: int = 1,
+                   edge_scales: Optional[Sequence[float]] = None,
+                   cloud_speedup: float = 1.0) -> "TreeProfile":
+        """Lift a star profile to ``n_edges`` edge servers.
+
+        ``edge_scales[e]`` is edge ``e``'s slowdown relative to the star's
+        edge row; the cloud row is divided by ``cloud_speedup``.  With one
+        edge at scale 1.0 and speedup 1.0 every row is numerically
+        identical to the star profile (``x * 1.0`` and ``x / 1.0`` are
+        exact), so the E=1 tree is the bit-exact star."""
+        scales = np.ones(n_edges) if edge_scales is None else \
+            np.asarray(tuple(edge_scales), np.float64)
+        assert scales.shape == (n_edges,) and (scales > 0).all()
+        assert cloud_speedup > 0
+        m = profile.num_devices
+        names = profile.worker_names[:m] + \
+            (("edge",) if n_edges == 1 else
+             tuple(f"edge_{i}" for i in range(n_edges))) + ("cloud",)
+
+        def lift(a: np.ndarray) -> np.ndarray:
+            return np.concatenate(
+                [a[:m], a[m][None, :] * scales[:, None],
+                 a[m + 1][None, :] / cloud_speedup], axis=0)
+
+        return cls(layer_names=profile.layer_names, worker_names=names,
+                   L_f=lift(profile.L_f), L_b=lift(profile.L_b),
+                   L_u=lift(profile.L_u), MP=profile.MP, MO=profile.MO,
+                   sample_bytes=profile.sample_bytes, MG=profile.MG,
+                   n_edges=n_edges, cloud_speedup=cloud_speedup)
+
+    def to_multi(self) -> MultiProfile:
+        """The exact star profile (requires ``E == 1``)."""
+        assert self.n_edges == 1, "only an E=1 profile reduces to a star"
+        return MultiProfile(
+            layer_names=self.layer_names, worker_names=self.worker_names,
+            L_f=self.L_f, L_b=self.L_b, L_u=self.L_u, MP=self.MP,
+            MO=self.MO, sample_bytes=self.sample_bytes, MG=self.MG)
+
+
+@dataclasses.dataclass
 class StarNetwork:
     """Star topology: per-device uplinks ``bw_de[i]`` (device_i↔edge) and one
     backhaul ``bw_ec`` (edge↔cloud), all in bytes/s.  Paths without a direct
@@ -443,6 +537,20 @@ class StarNetwork:
     @property
     def num_devices(self) -> int:
         return int(self.bw_de.size)
+
+    # Tree-compat view (a star is the one-edge tree): generic code paths
+    # read ``num_edges``/``edge_of``/``backhaul`` off either network type.
+    @property
+    def num_edges(self) -> int:
+        return 1
+
+    @property
+    def edge_of(self) -> Tuple[int, ...]:
+        return (0,) * self.num_devices
+
+    @property
+    def backhaul(self) -> np.ndarray:
+        return np.array([self.bw_ec], np.float64)
 
     @classmethod
     def from_network(cls, net: Network, num_devices: int = 1
@@ -513,6 +621,120 @@ class StarNetwork:
         return up
 
 
+@dataclasses.dataclass
+class TreeNetwork:
+    """Two-level tree: device ``i`` reaches its edge ``edge_of[i]`` over
+    radio ``bw_de[i]``; edge ``e`` reaches the cloud over its own backhaul
+    ``bw_ec[e]`` (all bytes/s).  Paths without a direct link are series
+    compositions of their hops — device↔cloud through the device's edge,
+    edge↔edge and device↔foreign-edge through the cloud.  With one edge
+    every pairwise path reduces to the :class:`StarNetwork` expression
+    bit-for-bit (series terms enter as exact ``+ 0.0``)."""
+    bw_de: np.ndarray
+    bw_ec: np.ndarray
+    edge_of: Tuple[int, ...] = (0,)
+
+    def __post_init__(self) -> None:
+        self.bw_de = np.atleast_1d(np.asarray(self.bw_de, np.float64))
+        self.bw_ec = np.atleast_1d(np.asarray(self.bw_ec, np.float64))
+        self.edge_of = tuple(int(e) for e in self.edge_of)
+        assert (self.bw_de > 0).all() and (self.bw_ec > 0).all()
+        assert len(self.edge_of) == self.num_devices
+        counts = np.bincount(self.edge_of, minlength=self.num_edges)
+        assert counts.size == self.num_edges and (counts > 0).all(), \
+            "every edge needs at least one device"
+
+    @property
+    def num_devices(self) -> int:
+        return int(self.bw_de.size)
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.bw_ec.size)
+
+    @property
+    def backhaul(self) -> np.ndarray:
+        return self.bw_ec
+
+    @classmethod
+    def from_star(cls, net: StarNetwork) -> "TreeNetwork":
+        return cls(bw_de=net.bw_de, bw_ec=np.array([net.bw_ec]),
+                   edge_of=(0,) * net.num_devices)
+
+    def to_star(self) -> StarNetwork:
+        assert self.num_edges == 1, "only an E=1 tree reduces to a star"
+        return StarNetwork(bw_de=self.bw_de, bw_ec=float(self.bw_ec[0]))
+
+    def bw_matrix(self) -> np.ndarray:
+        """``[M+E+1, M+E+1]`` pairwise bandwidths in worker order
+        (devices..., edges..., cloud); diagonal ``inf``."""
+        m, e = self.num_devices, self.num_edges
+        w = m + e + 1
+        eo = np.asarray(self.edge_of)
+        de, ec = self.bw_de, self.bw_ec
+        inv_bh = 1.0 / ec[eo]                        # [M] own-backhaul term
+        bwm = np.full((w, w), np.inf)
+        # device_i <-> edge_k: direct radio to its own edge, relayed via
+        # its own backhaul + the foreign edge's backhaul otherwise.
+        same = eo[:, None] == np.arange(e)[None, :]          # [M, E]
+        d_edge = np.where(
+            same, de[:, None],
+            1.0 / (1.0 / de[:, None] + inv_bh[:, None] + 1.0 / ec[None, :]))
+        bwm[:m, m:m + e] = d_edge
+        bwm[m:m + e, :m] = d_edge.T
+        # edge_k <-> cloud: its own backhaul.
+        bwm[m:m + e, m + e] = bwm[m + e, m:m + e] = ec
+        # device_i <-> cloud: radio in series with its edge's backhaul —
+        # the star's relayed Fig. 1(c) path, per-edge.
+        dc = 1.0 / (1.0 / de + inv_bh)
+        bwm[:m, m + e] = bwm[m + e, :m] = dc
+        # device_i <-> device_j: series through the shared edge, plus both
+        # backhauls when the devices sit under different edges.  The
+        # same-edge term adds an exact 0.0, so at E=1 this is the star's
+        # ``dd`` expression bit-for-bit.
+        cross = 1.0 / de[:, None] + 1.0 / de[None, :] + np.where(
+            eo[:, None] == eo[None, :], 0.0,
+            inv_bh[:, None] + inv_bh[None, :])
+        dd = 1.0 / cross
+        dd[np.diag_indices(m)] = np.inf
+        bwm[:m, :m] = dd
+        # edge_a <-> edge_b: series through the cloud.
+        ee = 1.0 / (1.0 / ec[:, None] + 1.0 / ec[None, :])
+        ee[np.diag_indices(e)] = np.inf
+        bwm[m:m + e, m:m + e] = ee
+        return bwm
+
+    def upload_bw(self) -> np.ndarray:
+        """``[M+E+1]`` effective ingest bandwidth under the even-upload
+        model (every device ships ``b/M`` samples to the destination).
+        An all-local edge ingests at ``M * min_j path(j, dst)`` — the
+        star expression bit-for-bit, so E=1 always takes that branch.
+        Chunks that cross a backhaul serialize per shaped pipe (matching
+        the simulator's input classes): the cloud composes the bottleneck
+        radio aggregate with the bottleneck per-edge uplink share
+        ``min_e bw_ec[e] / (M_e / M)``; a foreign-edge destination adds
+        the worst foreign uplink (``M_e`` chunks over ``bw_ec[e]``) and
+        its own downlink (``M - M_k`` foreign chunks over ``bw_ec[k]``)
+        in series with the radio stage."""
+        m, e = self.num_devices, self.num_edges
+        up = np.full(m + e + 1, np.inf)
+        bwm = self.bw_matrix()
+        counts = np.bincount(self.edge_of, minlength=e)
+        for k in range(e):
+            if counts[k] == m:            # all devices local (always at E=1)
+                up[m + k] = m * bwm[:m, m + k].min()
+            else:
+                inv = (1.0 / self.bw_de.min() +
+                       max(counts[e2] / self.bw_ec[e2]
+                           for e2 in range(e) if e2 != k) +
+                       (m - counts[k]) / self.bw_ec[k])
+                up[m + k] = m / inv
+        radio = m * self.bw_de.min()
+        bh = (self.bw_ec / (counts / m)).min()
+        up[m + e] = 1.0 / (1.0 / radio + 1.0 / bh)
+        return up
+
+
 @dataclasses.dataclass(frozen=True)
 class MultiSchedule:
     """An M-device HierTrain scheduling decision.
@@ -556,8 +778,8 @@ class MultiSchedule:
 
 def _validate_multi(profile: MultiProfile, sched: MultiSchedule) -> None:
     N = profile.num_layers
-    M = profile.num_devices
-    assert len(sched.s_workers) == len(sched.m_s) == len(sched.b_s) == M
+    S = profile.num_streams
+    assert len(sched.s_workers) == len(sched.m_s) == len(sched.b_s) == S
     assert 0 <= sched.m_l <= N
     for m_i, b_i in zip(sched.m_s, sched.b_s):
         assert 0 <= m_i <= sched.m_l, "need 0 <= m_s[i] <= m_l <= N"
@@ -567,7 +789,7 @@ def _validate_multi(profile: MultiProfile, sched: MultiSchedule) -> None:
         assert sched.b_l == 0, "m_l = 0 forces b_l = 0"
     widx = profile.widx
     seen = {sched.worker_o, sched.worker_l, *sched.s_workers}
-    assert len(seen) == M + 2 and all(w in widx for w in seen), \
+    assert len(seen) == S + 2 and all(w in widx for w in seen), \
         "schedule must name every worker exactly once"
 
 
@@ -583,7 +805,7 @@ def _t_total_multi(profile: MultiProfile, net: StarNetwork,
     """
     _validate_multi(profile, sched)
     N = profile.num_layers
-    M = profile.num_devices
+    D = profile.num_devices       # data holders (locality), not streams
     p = profile.prefix()
     F, Bk, U, MPc = p["F"], p["Bk"], p["U"], p["MP"]
     widx = profile.widx
@@ -598,7 +820,7 @@ def _t_total_multi(profile: MultiProfile, net: StarNetwork,
     Q = profile.sample_bytes
 
     def t_in(w: int, b: int) -> float:
-        if b == 0 or w < M:          # device-resident: local data
+        if b == 0 or w < D:          # device-resident: local data
             return 0.0
         return b * Q / up[w]
 
@@ -665,30 +887,32 @@ def _t_total_multi_batch(profile: MultiProfile, net: StarNetwork,
                          b: np.ndarray) -> np.ndarray:
     """Vectorized :func:`_t_total_multi` over K candidate schedules.
 
-    ``o_idx, l_idx, ml``: ``[K]``; ``s_idx, ms``: ``[K, M]``;
-    ``b``: ``[K, M+2]`` split ``(b_o, b_s[0..M-1], b_l)``.  Every arithmetic
-    expression mirrors the scalar evaluation term-for-term, and with
-    ``M = 1`` also mirrors :func:`t_total_batch` — a lane is bit-identical
-    to both.
+    ``o_idx, l_idx, ml``: ``[K]``; ``s_idx, ms``: ``[K, S]``;
+    ``b``: ``[K, S+2]`` split ``(b_o, b_s[0..S-1], b_l)`` where ``S`` is
+    ``profile.num_streams`` (``M`` on a star, ``M + E - 1`` on a tree).
+    Every arithmetic expression mirrors the scalar evaluation
+    term-for-term, and with ``M = 1`` also mirrors :func:`t_total_batch`
+    — a lane is bit-identical to both.
     """
     N = profile.num_layers
-    M = profile.num_devices
+    D = profile.num_devices       # data holders (locality), not streams
+    S = profile.num_streams
     p = profile.prefix()
     F, Bk, U, MPc = p["F"], p["Bk"], p["U"], p["MP"]
     bwm = net.bw_matrix()
     up = net.upload_bw()
     Q = profile.sample_bytes
     bo = np.asarray(b[:, 0], np.float64)
-    bs = np.asarray(b[:, 1:1 + M], np.float64)
-    bl = np.asarray(b[:, 1 + M], np.float64)
+    bs = np.asarray(b[:, 1:1 + S], np.float64)
+    bl = np.asarray(b[:, 1 + S], np.float64)
     o2 = o_idx[:, None]
     msmax = ms.max(axis=1)
 
-    bw_os = bwm[o_idx[:, None], s_idx]        # [K, M]
+    bw_os = bwm[o_idx[:, None], s_idx]        # [K, S]
     bw_ol = bwm[o_idx, l_idx]
 
     def t_in(w_idx: np.ndarray, bb: np.ndarray) -> np.ndarray:
-        return np.where((bb == 0) | (w_idx < M), 0.0, bb * Q / up[w_idx])
+        return np.where((bb == 0) | (w_idx < D), 0.0, bb * Q / up[w_idx])
 
     t_in_o, t_in_s, t_in_l = t_in(o_idx, bo), t_in(s_idx, bs), t_in(l_idx, bl)
     mo_s = profile.MO[np.maximum(ms, 1) - 1]
@@ -880,5 +1104,32 @@ def t_total_multi_batch(profile: MultiProfile, net: StarNetwork,
     from repro.core._deprecation import warn_deprecated
     warn_deprecated("repro.core.cost_model.t_total_multi_batch()",
                     "repro.api.plan(model, fleet, B)")
+    return _t_total_multi_batch(profile, net, o_idx, s_idx, l_idx, ms, ml,
+                                b)
+
+
+# ---------------------------------------------------------------------------
+# Tree topology entry points (DESIGN.md §12).  The generalized multi
+# evaluators above are stream-generic — a tree schedule carries
+# S = M + E - 1 TASK-S streams and the per-edge structure lives in
+# TreeProfile/TreeNetwork — so these are thin, *supported* (not
+# deprecated) wrappers with tree-typed signatures.
+# ---------------------------------------------------------------------------
+
+
+def t_total_tree(profile: TreeProfile, net: TreeNetwork,
+                 sched: MultiSchedule) -> Breakdown:
+    """Exact generalized Eq. (12) for an integer tree schedule.  At
+    ``E = 1`` every term is the star's :func:`_t_total_multi` expression
+    bit-for-bit (the equivalence suite asserts it)."""
+    return _t_total_multi(profile, net, sched)
+
+
+def t_total_tree_batch(profile: TreeProfile, net: TreeNetwork,
+                       o_idx: np.ndarray, s_idx: np.ndarray,
+                       l_idx: np.ndarray, ms: np.ndarray, ml: np.ndarray,
+                       b: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`t_total_tree` over K candidate lanes
+    (``s_idx``/``ms``: ``[K, S]``, ``b``: ``[K, S+2]``)."""
     return _t_total_multi_batch(profile, net, o_idx, s_idx, l_idx, ms, ml,
                                 b)

@@ -267,6 +267,211 @@ def multi_hybrid_step_from_schedule(model, params: Params,
 
 
 # ---------------------------------------------------------------------------
+# Two-level tree generalization: streams live under E edge servers; each
+# edge pre-merges the activations of its resident same-cut streams before
+# the cloud-side walk, and the cloud tail (layers m_l..N) can optionally
+# run data-parallel under shard_map on a device mesh.  Activation
+# concatenation is arithmetic-free, so with every stream on one edge
+# (E = 1) the produced params and loss are bit-identical to
+# :func:`multi_hybrid_sgd_step` — the sample order, every matmul batch
+# and the loss-sum reduction order coincide.
+# ---------------------------------------------------------------------------
+
+
+def tree_hybrid_sgd_step(model, params: Params,
+                         batches: Dict[str, object],
+                         m_s: Sequence[int], m_l: int, lr: float,
+                         wire: str = "none",
+                         stream_edge: Sequence[int] | None = None,
+                         cloud_mesh=None) -> Tuple[Params, jax.Array]:
+    """One tree HierTrain iteration.  Returns (updated params, mean loss).
+
+    ``stream_edge[i]`` names the edge hosting TASK-S stream ``i`` (device
+    streams sit under their radio's edge; an edge's own stream under
+    itself).  Streams sharing ``(cut, edge)`` are concatenated *on the
+    edge* into one activation block before joining worker_o's
+    ascending-cut walk — E merge points feeding the cloud merge, exactly
+    the two-level aggregation the topology describes.  ``cloud_mesh``
+    (optional) runs the cloud-resident tail segment ``m_l..N``
+    data-parallel over the mesh's dp axes via ``shard_map`` (two-stage
+    VJP: the front is differentiated with ``jax.vjp``, the tail's
+    value-and-grad runs *inside* the mapped body with ``psum``-reduced
+    parameter grads and loss); the default ``None`` keeps the single
+    ``value_and_grad`` program whose results are bit-identical to the
+    star path at E=1.
+    """
+    stack = as_layerstack(model)
+    N = stack.num_layers
+    codec = wire_codec(wire)
+    m_s = tuple(int(m) for m in m_s)
+    M = len(m_s)
+    eo = tuple(int(e) for e in stream_edge) if stream_edge is not None \
+        else (0,) * M
+    assert len(eo) == M
+    x_o, y_o = batches["o"]
+    s_streams = batches["s"]
+    x_l, y_l = batches["l"]
+    assert len(s_streams) == M
+    assert all(0 <= m <= m_l for m in m_s) and m_l <= N
+    b_s = [sx.shape[0] for sx, _ in s_streams]
+    b_o, b_l = x_o.shape[0], x_l.shape[0]
+    B = b_o + sum(b_s) + b_l
+    # Ascending-cut order with the hosting edge (then stream index)
+    # breaking ties; maximal runs of equal (cut, edge) are one edge-side
+    # merge each.  With every stream on edge 0 this is exactly the star
+    # join order.
+    join_order = sorted((i for i in range(M) if b_s[i]),
+                        key=lambda i: (m_s[i], eo[i], i))
+    groups: List[Tuple[int, List[int]]] = []
+    for i in join_order:
+        if groups and groups[-1][0] == m_s[i] and eo[groups[-1][1][-1]] == \
+                eo[i]:
+            groups[-1][1].append(i)
+        else:
+            groups.append((m_s[i], [i]))
+
+    p_o = params
+    p_s = [params[:m] for m in m_s]
+    p_l = params[:m_l]
+
+    def front(p_o: Params, p_s: List[Params], p_l: Params) -> jax.Array:
+        """Everything up to the cloud boundary ``m_l``: per-stream
+        frontends, per-edge merges, worker_o's walk, TASK L's arrival."""
+        h = [stack.apply_segment(p_s[i], s_streams[i][0], 0, m_s[i])
+             if b_s[i] else None for i in range(M)]
+        h_l = stack.apply_segment(p_l, x_l, 0, m_l) if b_l else None
+        if codec is not None:
+            h = [codec(h[i]) if h[i] is not None and m_s[i] > 0 else h[i]
+                 for i in range(M)]
+            if h_l is not None and m_l > 0:
+                h_l = codec(h_l)
+        cur = x_o
+        prev = 0
+        for cut, members in groups:
+            if cut != prev:
+                cur = stack.apply_segment(p_o, cur, prev, cut)
+                prev = cut
+            blk = h[members[0]] if len(members) == 1 else \
+                jnp.concatenate([h[i] for i in members], axis=0)
+            cur = jnp.concatenate([cur, blk], axis=0)
+        cur = stack.apply_segment(p_o, cur, prev, m_l)
+        if h_l is not None:
+            cur = jnp.concatenate([cur, h_l], axis=0)
+        return cur
+
+    labels = jnp.concatenate(
+        [y_o] + [s_streams[i][1] for i in join_order] + [y_l], axis=0)
+
+    if cloud_mesh is None:
+        def iteration_loss(p_o: Params, p_s: List[Params], p_l: Params
+                           ) -> jax.Array:
+            logits = stack.apply_segment(p_o, front(p_o, p_s, p_l), m_l, N)
+            return stack.sum_loss(logits, labels)
+
+        total_loss, (g_o, g_s, g_l) = jax.value_and_grad(
+            iteration_loss, argnums=(0, 1, 2))(p_o, p_s, p_l)
+    else:
+        total_loss, g_o, g_s, g_l = _sharded_tail_grads(
+            stack, front, labels, p_o, p_s, p_l, m_l, N, B, cloud_mesh)
+
+    new_params: Params = []
+    for i in range(N):
+        g = g_o[i]
+        for d in range(M):
+            if i < m_s[d] and b_s[d]:
+                g = jax.tree.map(jnp.add, g, g_s[d][i])
+        if i < m_l and b_l:
+            g = jax.tree.map(jnp.add, g, g_l[i])
+        new_params.append(jax.tree.map(
+            lambda p, gg: p - lr * (gg / B), params[i], g))
+    return new_params, total_loss / B
+
+
+def _sharded_tail_grads(stack, front, labels, p_o: Params,
+                        p_s: List[Params], p_l: Params, m_l: int, N: int,
+                        B: int, mesh):
+    """Loss + grads with the cloud tail ``m_l..N`` data-parallel under
+    ``shard_map``.  Two-stage composition: ``jax.vjp`` through the front,
+    then the tail's ``value_and_grad`` *inside* the mapped body — param
+    grads and the per-sample-sum loss are ``psum``-reduced over the dp
+    axes while the activation cotangent stays batch-sharded and flows
+    back through the front's VJP."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distrib import compat, sharding
+
+    dp = sharding.dp_axes(mesh)
+    if not dp:
+        raise ValueError("cloud_mesh has no data-parallel axes "
+                         "('pod'/'data'); got axes "
+                         f"{tuple(mesh.axis_names)}")
+    n_shards = 1
+    for a in dp:
+        n_shards *= mesh.shape[a]
+    if B % n_shards != 0:
+        raise ValueError(
+            f"global batch {B} is not divisible by the cloud mesh's "
+            f"{n_shards} data-parallel shards; pick a schedule whose "
+            "batch split is a multiple of the dp size")
+
+    cur, front_vjp = jax.vjp(front, p_o, p_s, p_l)
+
+    def tail_loss(p_o: Params, cur: jax.Array, lab: jax.Array) -> jax.Array:
+        return stack.sum_loss(stack.apply_segment(p_o, cur, m_l, N), lab)
+
+    def body(p_o: Params, cur_l: jax.Array, lab_l: jax.Array):
+        loss_l, (gp_l, gc_l) = jax.value_and_grad(
+            tail_loss, argnums=(0, 1))(p_o, cur_l, lab_l)
+        gp = jax.tree.map(lambda t: jax.lax.psum(t, dp), gp_l)
+        return jax.lax.psum(loss_l, dp), gp, gc_l
+
+    spec_cur = P(dp, *([None] * (cur.ndim - 1)))
+    spec_lab = P(dp, *([None] * (labels.ndim - 1)))
+    sharded = compat.shard_map(
+        body, in_specs=(P(), spec_cur, spec_lab),
+        out_specs=(P(), P(), spec_cur), axis_names=set(dp),
+        check_vma=False, mesh=mesh)
+    total_loss, g_o_tail, g_cur = sharded(p_o, cur, labels)
+    g_o_front, g_s, g_l = front_vjp(g_cur)
+    g_o = jax.tree.map(jnp.add, g_o_front, g_o_tail)
+    return total_loss, g_o, g_s, g_l
+
+
+def tree_stream_edges(profile, net, sched: MultiSchedule) -> Tuple[int, ...]:
+    """Per-TASK-S-stream hosting edge for a tree schedule: a device
+    stream sits under its radio's edge, an edge's own stream under
+    itself, and a cloud-hosted stream merges with the front group
+    (index 0).  On an E=1 tree every stream maps to edge 0, which is
+    what keeps the traced step identical to the star's."""
+    D = profile.num_devices
+    E = net.num_edges
+    eo = net.edge_of
+    out = []
+    for w in sched.s_workers:
+        i = profile.widx[w]
+        if i < D:
+            out.append(eo[i])
+        else:
+            j = i - D
+            out.append(j if j < E else 0)
+    return tuple(out)
+
+
+def tree_hybrid_step_from_schedule(model, params: Params,
+                                   x: jax.Array, y: jax.Array,
+                                   sched: MultiSchedule, lr: float,
+                                   wire: str = "none",
+                                   stream_edge: Sequence[int] | None = None,
+                                   cloud_mesh=None
+                                   ) -> Tuple[Params, jax.Array]:
+    return tree_hybrid_sgd_step(model, params, multi_split_batch(x, y,
+                                                                 sched),
+                                sched.m_s, sched.m_l, lr, wire=wire,
+                                stream_edge=stream_edge,
+                                cloud_mesh=cloud_mesh)
+
+
+# ---------------------------------------------------------------------------
 # Compiled fast path.  The cuts and learning rate are static (they select
 # the program structure), the params are donated (the step consumes the old
 # consensus weights and returns the new ones), and compiled steps live in a
@@ -368,6 +573,30 @@ def jitted_multi_hybrid_step(model, m_s: Sequence[int],
         def step(params: Params, batches):
             return multi_hybrid_sgd_step(model, params, batches, cuts,
                                          m_l, lr, wire=wire)
+        return jax.jit(step, donate_argnums=0)
+    return _cached_step(key, model, make)
+
+
+def jitted_tree_hybrid_step(model, m_s: Sequence[int], m_l: int, lr: float,
+                            wire: str = "none",
+                            stream_edge: Sequence[int] | None = None,
+                            cloud_mesh=None) -> Callable:
+    """Compiled tree-step variant of :func:`jitted_multi_hybrid_step`;
+    the stream→edge map and the (optional) cloud mesh join the static
+    cache key — a mesh swap recompiles rather than reusing a program
+    lowered for the old device set."""
+    cuts = tuple(int(m) for m in m_s)
+    edges = tuple(int(e) for e in stream_edge) if stream_edge is not None \
+        else (0,) * len(cuts)
+    key = ("tree", id(model), cuts, int(m_l), float(lr), str(wire), edges,
+           None if cloud_mesh is None else id(cloud_mesh))
+
+    def make():
+        def step(params: Params, batches):
+            return tree_hybrid_sgd_step(model, params, batches, cuts,
+                                        m_l, lr, wire=wire,
+                                        stream_edge=edges,
+                                        cloud_mesh=cloud_mesh)
         return jax.jit(step, donate_argnums=0)
     return _cached_step(key, model, make)
 

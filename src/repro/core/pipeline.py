@@ -258,11 +258,23 @@ def _period_parts_multi(profile: MultiProfile, net: StarNetwork,
                         b: np.ndarray
                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
                                    np.ndarray, np.ndarray]:
-    """Per-lane ``(cpu [K,W], link [K,W,W], in_de [K,M,2], in_ec [K],
-    recurrence [K])`` for the star topology (``in_de`` is the per-device
-    radio busy time per input class: ``->edge`` and ``->cloud``)."""
+    """Per-lane ``(cpu [K,W], link [K,W,W], in_de [K,M,E+1],
+    in_ec [K,E], in_fx [K,E,E], in_cd [K,E], recurrence [K])`` for the
+    star/tree topologies: ``in_de`` is the per-device radio busy time
+    per input class (one per destination edge plus ``->cloud``);
+    ``in_ec`` the per-edge uplink cloud classes (``edge_e->cloud``);
+    ``in_fx`` the per-edge uplink foreign-relay classes
+    (``edge_e->cloud:edge_k``) and ``in_cd`` the cloud downlink classes
+    (``cloud->edge_e``), both only used by foreign-edge relays and
+    identically zero at E=1 where ``in_ec[:, 0]`` is the star's shared
+    input backhaul."""
     N = profile.num_layers
-    M = profile.num_devices
+    M = profile.num_devices       # data holders (locality), not streams
+    S = profile.num_streams
+    W = profile.num_workers
+    E = net.num_edges
+    edge_of = np.asarray(net.edge_of)
+    backhaul = net.backhaul
     p = profile.prefix()
     F, Bk, U, MPc = p["F"], p["Bk"], p["U"], p["MP"]
     bwm = net.bw_matrix()
@@ -270,12 +282,12 @@ def _period_parts_multi(profile: MultiProfile, net: StarNetwork,
     K = o_idx.shape[0]
     ar = np.arange(K)
     bo = np.asarray(b[:, 0], np.float64)
-    bs = np.asarray(b[:, 1:1 + M], np.float64)
-    bl = np.asarray(b[:, 1 + M], np.float64)
+    bs = np.asarray(b[:, 1:1 + S], np.float64)
+    bl = np.asarray(b[:, 1 + S], np.float64)
     o2 = o_idx[:, None]
     msmax = ms.max(axis=1)
 
-    bw_os = bwm[o2, s_idx]                                # [K, M]
+    bw_os = bwm[o2, s_idx]                                # [K, S]
     bw_ol = bwm[o_idx, l_idx]
     mo_s = profile.MO[np.maximum(ms, 1) - 1]
     mo_l = profile.MO[np.maximum(ml, 1) - 1]
@@ -308,15 +320,15 @@ def _period_parts_multi(profile: MultiProfile, net: StarNetwork,
         "u_o": np.broadcast_to(U[o_idx, N], (K,)).astype(np.float64),
     }
 
-    cpu = np.zeros((K, M + 2))
+    cpu = np.zeros((K, W))
     np.add.at(cpu, (ar, o_idx), d["f_o1"] + d["f_o2"] + d["f_o3"] +
               d["b_o3"] + d["b_o2"] + d["b_o1"] + d["u_o"])
-    for i in range(M):
+    for i in range(S):
         np.add.at(cpu, (ar, s_idx[:, i]),
                   d["f_s"][:, i] + d["b_s"][:, i] + d["u_s"][:, i])
     np.add.at(cpu, (ar, l_idx), d["f_l"] + d["b_l"] + d["u_l"])
-    link = np.zeros((K, M + 2, M + 2))
-    for i in range(M):
+    link = np.zeros((K, W, W))
+    for i in range(S):
         np.add.at(link, (ar, s_idx[:, i], o_idx),
                   d["act_s"][:, i] + d["wg_s"][:, i])
         np.add.at(link, (ar, o_idx, s_idx[:, i]),
@@ -326,29 +338,46 @@ def _period_parts_multi(profile: MultiProfile, net: StarNetwork,
 
     # TC input-class pipes: device j's radio carries a ``b/M`` chunk of
     # every edge- or cloud-resident task's sub-batch, one shaped class per
-    # (device, destination) pair — matching the simulator; cloud chunks
-    # then serialize on the shared input backhaul (upload order o,
-    # s_i..., l — matching the simulator's task-add order).
-    in_de = np.zeros((K, M, 2))        # [..., 0] ->edge, [..., 1] ->cloud
-    in_ec = np.zeros(K)
+    # (device, destination) pair — matching the simulator; cloud- and
+    # foreign-edge-bound chunks then serialize on the sender's edge
+    # uplink backhaul (upload order o, s_i..., l — matching the
+    # simulator's task-add order), and foreign-edge chunks additionally
+    # on the destination edge's cloud downlink.
+    in_de = np.zeros((K, M, E + 1))    # [..., e] ->edge_e, [..., E] ->cloud
+    in_ec = np.zeros((K, E))           # uplink class edge_e -> cloud
+    in_fx = np.zeros((K, E, E))        # uplink class edge_e -> foreign edge
+    in_cd = np.zeros((K, E))           # downlink cloud -> edge_e
+    counts = np.bincount(edge_of, minlength=E).astype(np.float64)
 
     def ingest(w_idx: np.ndarray, bb: np.ndarray) -> None:
         chunk = np.where((w_idx < M) | (bb == 0), 0.0, bb * Q / M)
-        edge_c = np.where(w_idx == M, chunk, 0.0)
-        cloud_c = np.where(w_idx == M + 1, chunk, 0.0)
+        cloud_c = np.where(w_idx == W - 1, chunk, 0.0)
+        edge_c = [np.where(w_idx == M + e, chunk, 0.0) for e in range(E)]
         for j in range(M):
-            in_de[:, j, 0] += edge_c / net.bw_de[j]
-            in_de[:, j, 1] += cloud_c / net.bw_de[j]
-        # all M relay chunks of a cloud-bound upload serialize on the
-        # shared input backhaul
-        in_ec[:] += M * (cloud_c / net.bw_ec)
+            for e in range(E):
+                in_de[:, j, e] += edge_c[e] / net.bw_de[j]
+            in_de[:, j, E] += cloud_c / net.bw_de[j]
+        for e in range(E):
+            # edge e's devices relay cloud-bound chunks over edge e's
+            # uplink cloud class; at E=1 this is the star's
+            # ``M * (cloud_c / bw_ec)`` term bit-for-bit.  Foreign-edge
+            # chunks ride their own per-destination uplink class and the
+            # destination's downlink class (both absent at E=1),
+            # matching the simulator's shaped pipes.
+            in_ec[:, e] += counts[e] * (cloud_c / backhaul[e])
+            for e2 in range(E):
+                if e2 != e:
+                    in_fx[:, e, e2] += counts[e] * (edge_c[e2] /
+                                                    backhaul[e])
+            if M - counts[e] > 0:
+                in_cd[:, e] += (M - counts[e]) * (edge_c[e] / backhaul[e])
 
     ingest(o_idx, bo)
-    for i in range(M):
+    for i in range(S):
         ingest(s_idx[:, i], bs[:, i])
     ingest(l_idx, bl)
 
-    return cpu, link, in_de, in_ec, _maxplus_period_multi(d)
+    return cpu, link, in_de, in_ec, in_fx, in_cd, _maxplus_period_multi(d)
 
 
 def t_period_multi_batch(profile: MultiProfile, net: StarNetwork,
@@ -358,10 +387,13 @@ def t_period_multi_batch(profile: MultiProfile, net: StarNetwork,
     """Vectorized M-device steady-state period over K candidates (same
     index conventions as
     :func:`repro.core.cost_model.t_total_multi_batch`)."""
-    cpu, link, in_de, in_ec, rec = _period_parts_multi(
+    cpu, link, in_de, in_ec, in_fx, in_cd, rec = _period_parts_multi(
         profile, net, o_idx, s_idx, l_idx, ms, ml, b)
     busy = np.maximum(np.maximum(cpu.max(axis=1), link.max(axis=(1, 2))),
-                      np.maximum(in_de.max(axis=(1, 2)), in_ec))
+                      np.maximum(in_de.max(axis=(1, 2)),
+                                 np.maximum(in_ec.max(axis=1),
+                                            np.maximum(in_fx.max(axis=(1, 2)),
+                                                       in_cd.max(axis=1)))))
     return np.maximum(busy, rec)
 
 
@@ -381,6 +413,16 @@ def t_period_multi(profile: MultiProfile, net: StarNetwork,
     o_idx, s_idx, l_idx, ms, ml, b = _lane_multi(profile, sched)
     return float(t_period_multi_batch(profile, net, o_idx, s_idx, l_idx,
                                       ms, ml, b)[0])
+
+
+def t_period_tree(profile: MultiProfile, net: StarNetwork,
+                  sched: MultiSchedule) -> float:
+    """Steady-state period of a two-level tree pipelined schedule.
+
+    Accepts a :class:`TreeProfile`/:class:`TreeNetwork` pair (the
+    star-shaped arguments also work — a star is the E=1 tree); at E=1
+    the result is bit-identical to :func:`t_period_multi`."""
+    return t_period_multi(profile, net, sched)
 
 
 # ---------------------------------------------------------------------------

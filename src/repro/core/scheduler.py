@@ -565,7 +565,8 @@ def _build_multi_lp_stack(profile: MultiProfile, net: StarNetwork,
     """
     p = profile.prefix()
     F, Bk = p["F"], p["Bk"]
-    M = profile.num_devices
+    D = profile.num_devices       # data holders (locality), not streams
+    M = profile.num_streams       # stream count: the LP's variable layout
     K = o_idx.shape[0]
     nv = M + 6
     t1, t2, t3, t4 = M + 2, M + 3, M + 4, M + 5
@@ -577,9 +578,9 @@ def _build_multi_lp_stack(profile: MultiProfile, net: StarNetwork,
 
     bw_os = bwm[o2, s_idx]                                  # [K, M]
     bw_ol = bwm[o_idx, l_idx]
-    in_o = np.where(o_idx < M, 0.0, Q / up[o_idx])
-    in_s = np.where(s_idx < M, 0.0, Q / up[s_idx])
-    in_l = np.where(l_idx < M, 0.0, Q / up[l_idx])
+    in_o = np.where(o_idx < D, 0.0, Q / up[o_idx])
+    in_s = np.where(s_idx < D, 0.0, Q / up[s_idx])
+    in_l = np.where(l_idx < D, 0.0, Q / up[l_idx])
     mo_s = np.where(ms > 0, profile.MO[np.maximum(ms, 1) - 1] / bw_os, 0.0)
     mo_l = np.where(ml > 0, profile.MO[np.maximum(ml, 1) - 1] / bw_ol, 0.0)
     mg_s = np.where(ms > 0, profile.MG[np.maximum(ms, 1) - 1] / bw_os, 0.0)
@@ -649,7 +650,7 @@ def _solve_multi_lps(cost: np.ndarray, A_ub: np.ndarray, b_ub: np.ndarray,
 def _multi_schedule_from_lane(profile: MultiProfile, o_idx, s_idx, l_idx,
                               ms, ml, b_int, k: int) -> MultiSchedule:
     names = profile.worker_names
-    M = profile.num_devices
+    M = profile.num_streams
     return MultiSchedule(
         worker_o=names[int(o_idx[k])], worker_l=names[int(l_idx[k])],
         s_workers=tuple(names[int(j)] for j in s_idx[k]),
@@ -707,7 +708,9 @@ def _solve_multi(profile: MultiProfile, net: StarNetwork, B: int,
     if objective not in OBJECTIVES:
         raise ValueError(f"unknown scheduler objective: {objective!r}")
     N = profile.num_layers
-    M = profile.num_devices
+    M = profile.num_streams       # per-candidate stream count (slots for
+    #                               every non-o/non-l worker: devices on a
+    #                               star, devices + idle edges on a tree)
     p = profile.prefix()
     F, Bk, U = p["F"], p["Bk"], p["U"]
     cost = np.concatenate([np.zeros(M + 2), np.ones(4)])

@@ -263,7 +263,10 @@ def _add_iteration_multi(des: Des, profile: MultiProfile, net: StarNetwork,
     p = profile.prefix()
     F, Bk, U, MPc = p["F"], p["Bk"], p["U"], p["MP"]
     N = profile.num_layers
-    M = profile.num_devices
+    M = profile.num_devices       # data holders; streams come from sched
+    W = profile.num_workers
+    edge_of = net.edge_of         # device -> edge index ((0,)*M on a star)
+    backhaul = net.backhaul       # per-edge backhaul ([bw_ec] on a star)
     names = profile.worker_names
     widx = profile.widx
     o, l = widx[sched.worker_o], widx[sched.worker_l]
@@ -299,10 +302,14 @@ def _add_iteration_multi(des: Des, profile: MultiProfile, net: StarNetwork,
         """Input distribution for a task on worker ``w``: local (free) on a
         device, else ``b/M`` samples uploaded from every device at once,
         each on its own TC-shaped input-class radio pipe (see docstring).
-        Cloud-bound uploads are relayed: after its own radio hop every
-        chunk crosses ONE shared input-class backhaul pipe, so the M
-        parallel flows serialize there — matching ``upload_bw``'s series
-        composition instead of overbooking ``bw_ec`` M-fold."""
+        Relayed uploads cross one shaped input-class pipe per (shared
+        hop, destination) pair, so same-destination flows serialize
+        there — matching ``upload_bw``'s series composition instead of
+        overbooking a backhaul M-fold: cloud-bound chunks cross the
+        sender's per-edge backhaul pipe (``link:in:edge->cloud`` at E=1,
+        the star's literal pipe name); chunks bound for a *foreign* edge
+        cross their own uplink class (``...->cloud:{dst}``, keeping them
+        off the cloud-bound class) plus that edge's downlink class."""
         if w < M or b == 0:
             des.add(nm(base), (), (), ())
             return [nm(base)]
@@ -310,17 +317,26 @@ def _add_iteration_multi(des: Des, profile: MultiProfile, net: StarNetwork,
         chunk = b * Q / M
         for j in range(M):
             name = f"{nm(base)}_{j}"
-            if w == M + 1:               # device_j -> edge -> cloud relay
+            own = M + edge_of[j]         # device_j's aggregation edge
+            radio = (f"link:in:{names[j]}->{names[w]}",
+                     chunk / net.bw_de[j])
+            bh_up = (f"link:in:{names[own]}->cloud",
+                     chunk / backhaul[edge_of[j]])
+            if w == W - 1:               # device_j -> its edge -> cloud
                 # the radio hop is the (device, cloud) input class — its
                 # own TC pipe, NOT shared with the (device, edge) class
                 # (LM-fleet ingest is MBs per sample; sharing the first
                 # hop diverged from upload_bw by ~50% there)
-                des.add(name, (f"link:in:{names[j]}->{names[w]}",
-                               "link:in:edge->cloud"),
-                        (chunk / net.bw_de[j], chunk / net.bw_ec), ())
-            else:
-                des.add(name, (f"link:in:{names[j]}->{names[w]}",),
-                        (chunk / bwm[j, w],), ())
+                hops = (radio, bh_up)
+            elif w == own:               # direct radio hop to its edge
+                hops = ((radio[0], chunk / bwm[j, w]),)
+            else:                        # foreign edge: relay via cloud
+                hops = (radio,
+                        (f"{bh_up[0]}:{names[w]}", bh_up[1]),
+                        (f"link:in:cloud->{names[w]}",
+                         chunk / backhaul[w - M]))
+            des.add(name, tuple(h[0] for h in hops),
+                    tuple(h[1] for h in hops), ())
             out.append(name)
         return out
 
@@ -343,9 +359,9 @@ def _add_iteration_multi(des: Des, profile: MultiProfile, net: StarNetwork,
          else 0.0, [nm("f_l")])
     bs_sum = sum(bs)
     catch_f = sum(bs[i] * (F[o, msmax] - F[o, sched.m_s[i]])
-                  for i in range(M))
+                  for i in range(len(s)))
     catch_b = sum(bs[i] * (Bk[o, msmax] - Bk[o, sched.m_s[i]])
-                  for i in range(M))
+                  for i in range(len(s)))
     compute(nm("f_o1"), o, bo * F[o, msmax], in_o + lag("u_o"))
     compute(nm("f_o2"), o,
             (bo + bs_sum) * (F[o, ml] - F[o, msmax]) + catch_f,

@@ -19,9 +19,14 @@ uniform value density).
 Wire-format accounting (per step, per parameter byte tier):
 
     frontend: ring all-reduce, 2 (P-1)/P * 4 B/param (f32)
-    backend:  all-gather of int8 + per-row scales, (P-1)/P * ~1 B/param
+    backend:  all-gather of int8 + per-row scales,
+              (P-1)/P * (elems + 4 * rows) B/leaf
 
-so the backend tier moves ~8x fewer DCN bytes.
+so the backend tier moves ~8x fewer DCN bytes.  The per-leaf byte count
+is single-sourced from :func:`repro.core.wire.int8_leaf_bytes` — the
+same formula the wire cost model charges at activation crossings — so
+the predicted sync time and the bytes :func:`_compressed_mean` actually
+ships can never drift apart.
 """
 from __future__ import annotations
 
@@ -32,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.wire import int8_leaf_bytes
 from repro.kernels import ops as kops
 
 Tree = Any
@@ -41,7 +47,8 @@ Tree = Any
 class TierAssignment:
     quantized: Tree                  # pytree of bool, True = backend tier
     front_bytes: int
-    back_bytes: int
+    back_bytes: int                  # f32 bytes of the demoted leaves
+    back_wire_bytes: float           # their int8 payload + row scales
     sync_seconds: float              # predicted DCN time per step
 
     @property
@@ -50,7 +57,7 @@ class TierAssignment:
 
     def describe(self) -> str:
         return (f"front={self.front_bytes/1e9:.2f}GB "
-                f"back(int8)={self.back_bytes/1e9:.2f}GB "
+                f"back(int8)={self.back_wire_bytes/1e9:.2f}GB wire "
                 f"predicted sync={self.sync_seconds*1e3:.1f}ms")
 
 
@@ -66,6 +73,7 @@ def choose_tiers(param_shapes: Tree, *, n_pods: int,
     int8 tier until predicted DCN sync fits the budget."""
     leaves, treedef = jax.tree.flatten(param_shapes)
     sizes = [_leaf_bytes(l.shape) for l in leaves]
+    wire_sizes = [int8_leaf_bytes(l.shape) for l in leaves]
     order = np.argsort(sizes)[::-1]
     ring = 2.0 * (n_pods - 1) / n_pods
     gather = 1.0 * (n_pods - 1) / n_pods
@@ -74,8 +82,8 @@ def choose_tiers(param_shapes: Tree, *, n_pods: int,
 
     def sync_time():
         f = sum(s for s, q in zip(sizes, quant) if not q)
-        b = sum(s for s, q in zip(sizes, quant) if q)
-        return (f * ring + b * gather / 4.0) / dcn_bytes_per_s
+        b = sum(w for w, q in zip(wire_sizes, quant) if q)
+        return (f * ring + b * gather) / dcn_bytes_per_s
 
     budget = max_sync_fraction * compute_seconds
     for i in order:
@@ -84,9 +92,11 @@ def choose_tiers(param_shapes: Tree, *, n_pods: int,
         quant[i] = True
     fb = sum(s for s, q in zip(sizes, quant) if not q)
     bb = sum(s for s, q in zip(sizes, quant) if q)
+    bw = sum(w for w, q in zip(wire_sizes, quant) if q)
     return TierAssignment(
         quantized=jax.tree.unflatten(treedef, quant),
-        front_bytes=fb, back_bytes=bb, sync_seconds=sync_time())
+        front_bytes=fb, back_bytes=bb, back_wire_bytes=bw,
+        sync_seconds=sync_time())
 
 
 def _as_2d(x: jax.Array) -> Tuple[jax.Array, Tuple[int, ...]]:
@@ -126,7 +136,11 @@ def tiered_grad_sync(grads: Tree, tiers: Optional[TierAssignment],
 
 
 def dcn_bytes_per_step(tiers: TierAssignment, n_pods: int) -> float:
-    """Wire bytes per step per pod link (diagnostics for EXPERIMENTS.md)."""
+    """Wire bytes per step per pod link (diagnostics for EXPERIMENTS.md).
+
+    Backend leaves charge their exact int8 wire size (payload + per-row
+    f32 scales, :func:`repro.core.wire.int8_leaf_bytes`) — the same
+    accounting :func:`choose_tiers` optimized against."""
     ring = 2.0 * (n_pods - 1) / n_pods
     gather = 1.0 * (n_pods - 1) / n_pods
-    return tiers.front_bytes * ring + tiers.back_bytes * gather / 4.0
+    return tiers.front_bytes * ring + tiers.back_wire_bytes * gather

@@ -147,18 +147,23 @@ def _profile_from_arrays(template, worker_names, arrays):
     columns (MP/MO/MG/sample_bytes) are hardware-membership invariant, so
     they come from the caller's template; the per-worker rows and (for a
     star) the membership come from the checkpoint."""
-    from repro.core.cost_model import HierProfile, MultiProfile
+    from repro.core.cost_model import (HierProfile, MultiProfile,
+                                       TreeProfile)
     if worker_names is None:
         return HierProfile(
             layer_names=template.layer_names, L_f=arrays["L_f"],
             L_b=arrays["L_b"], L_u=arrays["L_u"], MP=template.MP,
             MO=template.MO, sample_bytes=template.sample_bytes,
             MG=template.MG)
-    return MultiProfile(
+    common = dict(
         layer_names=template.layer_names, worker_names=tuple(worker_names),
         L_f=arrays["L_f"], L_b=arrays["L_b"], L_u=arrays["L_u"],
         MP=template.MP, MO=template.MO,
         sample_bytes=template.sample_bytes, MG=template.MG)
+    if isinstance(template, TreeProfile):
+        return TreeProfile(n_edges=template.n_edges,
+                           cloud_speedup=template.cloud_speedup, **common)
+    return MultiProfile(**common)
 
 
 def _ema_profile_update(prof, baseline, slow: Dict[str, float],
@@ -210,12 +215,28 @@ def _loop_ops(topology: str, model, profile, net, cfg: "HierLoopConfig"):
                             "b": (s.b_o, s.b_s, s.b_l)},
             tag="hier",
         )
-    assert topology == "star", topology
+    assert topology in ("star", "tree"), topology
     from repro.core import scheduler
     from repro.core.cost_model import _t_total_multi
     from repro.core.hybrid_step import (jitted_multi_hybrid_step,
-                                        multi_split_batch)
+                                        jitted_tree_hybrid_step,
+                                        multi_split_batch,
+                                        tree_stream_edges)
     from repro.core.pipeline import t_period_multi
+
+    if topology == "tree":
+        # The tree step pre-merges each edge's same-cut streams; the
+        # stream→edge map depends on the live schedule, so it is
+        # re-derived per solve.  Straggler EMAs are already per-edge:
+        # every edge server is its own row of ``worker_names``.
+        step_fn = lambda s: jitted_tree_hybrid_step(  # noqa: E731
+            model, s.m_s, s.m_l, cfg.lr, wire=cfg.wire,
+            stream_edge=tree_stream_edges(profile, net, s))
+        tag = "tree-hier"
+    else:
+        step_fn = lambda s: jitted_multi_hybrid_step(  # noqa: E731
+            model, s.m_s, s.m_l, cfg.lr, wire=cfg.wire)
+        tag = "multi-hier"
 
     return dict(
         names=profile.worker_names,
@@ -224,12 +245,11 @@ def _loop_ops(topology: str, model, profile, net, cfg: "HierLoopConfig"):
             p, net, cfg.batch, objective=cfg.objective, warm_start=warm),
         fill=lambda p, s: _t_total_multi(p, net, s).total,
         period=lambda p, s: t_period_multi(p, net, s),
-        step_fn=lambda s: jitted_multi_hybrid_step(model, s.m_s, s.m_l,
-                                                   cfg.lr, wire=cfg.wire),
+        step_fn=step_fn,
         split=multi_split_batch,
         hist=lambda s: {"m_s": s.m_s, "m_l": s.m_l,
                         "b": (s.b_o, *s.b_s, s.b_l)},
-        tag="multi-hier",
+        tag=tag,
     )
 
 
@@ -323,6 +343,7 @@ def _run_loop(cfg: HierLoopConfig, model, profile, net, data,
         if cfg.ckpt_dir and cfg.ckpt_every else None
     if manager is not None:
         is_star = topology == "star"
+        is_tree = topology == "tree"
 
         def _like(ckpt_step, extra):
             if extra.get("seed") != cfg.seed:
@@ -353,7 +374,11 @@ def _run_loop(cfg: HierLoopConfig, model, profile, net, data,
             params = tree["params"]
             wall = float(extra["wall"])
             sched = _sched_from_json(extra["sched"])
-            names = tuple(extra["worker_names"]) if is_star else None
+            # Star membership may have churned, so names come from the
+            # checkpoint; tree/triple fleets have fixed membership and
+            # rebuild from the caller's template.
+            names = tuple(extra["worker_names"]) if is_star else \
+                (profile.worker_names if is_tree else None)
             prof = _profile_from_arrays(profile, names, tree["prof"])
             if is_star:
                 from repro.core.cost_model import StarNetwork

@@ -272,6 +272,6 @@ def test_churn_rejected_on_triple():
                                    Network(5e6 / 8, 1e6 / 8))
     data = SyntheticImages(model.input_shape, model.num_classes, 16,
                            seed=0)
-    with pytest.raises(ValueError, match="star"):
+    with pytest.raises(NotImplementedError, match="triple"):
         api.plan(model, fleet, 16).train(
             data, steps=2, churn=ChurnTrace((DeviceLeave(0, "x"),)))

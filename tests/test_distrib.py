@@ -57,6 +57,76 @@ def test_cache_spec_kv_vs_seq():
     assert s[2] == "model" and s[3] is None
 
 
+def test_batch_spec_global_batch_one_replicated():
+    from jax.sharding import PartitionSpec as P
+    # long_500k-style global_batch=1: indivisible by every DP axis ->
+    # fully replicated on both mesh layouts
+    for mesh in (MESH, SINGLE):
+        assert batch_spec(mesh, 1, 2) == P(None, None)
+    # divisible by data (16) but not pod*data (32) -> data-only fallback
+    assert batch_spec(MESH, 16, 2) == P("data", None)
+    # divisible by the full DP product -> (pod, data) on the lead dim
+    assert batch_spec(MESH, 64, 3) == P(("pod", "data"), None, None)
+
+
+def test_cache_spec_kv_one_full_spec():
+    from jax.sharding import PartitionSpec as P
+    # granite-style MQA cache [L, B, S, kv=1, hd]: the KV-head dim can't
+    # carry model=16, so the sequence dim does; batch rides the DP axes
+    assert cache_spec(MESH, (40, 32, 4096, 1, 64), 32) == \
+        P(None, ("pod", "data"), "model", None, None)
+    # with enough KV heads the head dim carries TP and S stays whole
+    assert cache_spec(MESH, (40, 32, 4096, 16, 64), 32) == \
+        P(None, ("pod", "data"), None, "model", None)
+
+
+def test_param_spec_stacked_leaf_rule():
+    from jax.sharding import PartitionSpec as P
+    # scanned [L, in, out] leaf: the stack dim is never sharded; TP goes
+    # to the larger of (in, out), FSDP to the other
+    assert param_spec(SINGLE, (24, 4096, 1024)) == P(None, "model", "data")
+    assert param_spec(SINGLE, (24, 1024, 4096)) == P(None, "data", "model")
+    # TP-only mode replicates the would-be FSDP dim
+    assert param_spec(SINGLE, (24, 1024, 4096), fsdp=False) == \
+        P(None, None, "model")
+    # a dim indivisible by the axis falls through to the next candidate
+    assert param_spec(SINGLE, (24, 151, 4096)) == P(None, None, "model")
+
+
+def test_int8_sync_bytes_single_source():
+    """Predicted DCN sync bytes (``choose_tiers``/``dcn_bytes_per_step``)
+    and the bytes the int8 all-gather actually ships (payload + per-row
+    f32 scales) both come from ``repro.core.wire.int8_leaf_bytes``."""
+    import jax.numpy as jnp
+    from repro.core.wire import int8_leaf_bytes
+    from repro.distrib.tiered_sync import (_as_2d, choose_tiers,
+                                           dcn_bytes_per_step)
+    from repro.kernels import ops as kops
+    shapes = {"w2d": (64, 32), "b1d": (128,), "stack3d": (4, 16, 8)}
+    arrs = {k: jax.random.normal(jax.random.PRNGKey(i), s)
+            for i, (k, s) in enumerate(shapes.items())}
+    # measured: what _compressed_mean ships per pod for one leaf
+    for k, a in arrs.items():
+        a2, _ = _as_2d(a)
+        q, scale = kops.quantize_int8(a2, jax.random.PRNGKey(9))
+        assert q.dtype == jnp.int8 and scale.dtype == jnp.float32
+        measured = q.size * q.dtype.itemsize + \
+            scale.size * scale.dtype.itemsize
+        assert measured == int8_leaf_bytes(a.shape), k
+    # predicted: the tier chooser and the diagnostics helper charge the
+    # same per-leaf formula (regression: the old inline ``bytes/4``
+    # estimate dropped the row scales)
+    pshapes = jax.eval_shape(lambda: arrs)
+    tiers = choose_tiers(pshapes, n_pods=2, dcn_bytes_per_s=1.0,
+                         compute_seconds=1e-12)    # force all-int8
+    assert all(jax.tree.leaves(tiers.quantized))
+    want_wire = sum(int8_leaf_bytes(s) for s in shapes.values())
+    assert tiers.back_wire_bytes == want_wire
+    gather = 0.5                                   # (P-1)/P at P=2
+    assert dcn_bytes_per_step(tiers, 2) == want_wire * gather
+    assert tiers.sync_seconds == want_wire * gather    # dcn = 1 B/s
+
+
 def _run_subprocess(code: str):
     out = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(code)],
@@ -118,6 +188,59 @@ def test_tiered_sync_equivalence_multidev():
                 step = np.abs(np.asarray(per_pod)).max() / 127.0
                 err = np.abs(np.asarray(q[name]) - np.asarray(exact))
                 assert err.max() <= step + 1e-6, (name, err.max(), step)
+        print("OK")
+    """)
+
+
+def test_tree_sharded_cloud_tier_multidev():
+    """Tree hybrid step with the cloud tail under ``shard_map`` on a real
+    8-device mesh: matches the unsharded tree step to f32 tolerance (the
+    psum reorders reductions, so not bitwise) and enforces batch
+    divisibility by the dp shard count."""
+    _run_subprocess("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.cost_model import MultiSchedule
+        from repro.core.hybrid_step import tree_hybrid_step_from_schedule
+        from repro.models.cnn import DenseSpec, LayeredModel
+
+        specs = tuple(DenseSpec(f"fc{i}", 16) for i in range(4)) + \\
+            (DenseSpec("out", 5, relu=False),)
+        model = LayeredModel("tiny_mlp", specs, (8,), 5)
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        sched = MultiSchedule(
+            worker_o="cloud", worker_l="device_3",
+            s_workers=("device_0", "device_1", "device_2", "edge_0",
+                       "edge_1"),
+            m_s=(2, 2, 1, 2, 1), m_l=3, b_o=6, b_s=(4, 3, 3, 5, 3), b_l=0)
+        eo = (0, 0, 1, 0, 1)
+        kx, ky = jax.random.split(jax.random.PRNGKey(0))
+        x = jax.random.normal(kx, (24, 8), jnp.float32)
+        y = jax.random.randint(ky, (24,), 0, 5)
+        params = model.init(jax.random.PRNGKey(1))
+        p_ref, l_ref = tree_hybrid_step_from_schedule(
+            model, params, x, y, sched, lr=0.05, stream_edge=eo)
+        p_sh, l_sh = tree_hybrid_step_from_schedule(
+            model, params, x, y, sched, lr=0.05, stream_edge=eo,
+            cloud_mesh=mesh)
+        np.testing.assert_allclose(float(l_ref), float(l_sh), rtol=1e-6)
+        for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_sh)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-5, atol=2e-6)
+
+        # B=24 divides the 4 dp shards; a 23-sample split must not
+        bad = MultiSchedule(
+            worker_o="cloud", worker_l="device_3",
+            s_workers=sched.s_workers, m_s=sched.m_s, m_l=3,
+            b_o=5, b_s=(4, 3, 3, 5, 3), b_l=0)
+        try:
+            tree_hybrid_step_from_schedule(
+                model, params, x[:23], y[:23], bad, lr=0.05,
+                stream_edge=eo, cloud_mesh=mesh)
+            raise SystemExit("divisibility guard did not fire")
+        except ValueError as e:
+            assert "divisible" in str(e), e
         print("OK")
     """)
 
