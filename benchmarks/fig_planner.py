@@ -1,0 +1,165 @@
+"""Cross-fleet planner throughput (beyond the paper; DESIGN.md §13).
+
+The serving question: a population of ~1000 client fleets — four device
+families, each a finite catalog of perturbed device classes
+(:mod:`repro.serve.population`) — asks for plans.  Three measurements:
+
+* **plans/sec batched** — one :class:`repro.serve.planner.Planner`
+  resolving the whole population: fingerprint cache + shape-bucketed
+  ``solve_many`` tableau stacks.
+* **plans/sec per-fleet loop** — the pre-planner baseline
+  (``api.plan`` per request), timed on a stratified per-family
+  subsample and extrapolated to the full population (the full loop is
+  minutes; the subsample is documented in the JSON payload).
+* **cache-hit latency** — p50/p99 of single-request ``plan_many``
+  calls against the warm cache.
+
+Deterministic per-family rows (population composition, class counts,
+distinct chosen schedules, modal schedule, cold hit rate) are guarded
+by the BENCH drift check; timings ride only on full ``--json`` runs.
+"""
+from __future__ import annotations
+
+import time
+from collections import Counter
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import table
+
+POP_N = 1024          # >= 1000 perturbed fleets (ISSUE 9 acceptance)
+POP_SEED = 0
+BASELINE_SAMPLE = 10  # per-family api.plan solves for the loop baseline
+HIT_SAMPLE = 200      # warm single-request latency probes
+MIN_SPEEDUP = 5.0     # acceptance floor: batched vs per-fleet loop
+
+
+def _family_of(tag: str) -> str:
+    return tag.split("/", 1)[0]
+
+
+def _class_of(tag: str) -> str:
+    return tag.split("/")[1]
+
+
+def measure(include_timing: bool = True) -> Dict:
+    from repro.api import plan
+    from repro.serve.planner import Planner
+    from repro.serve.population import synthetic_population
+
+    reqs = synthetic_population(n=POP_N, seed=POP_SEED)
+    planner = Planner()
+    t0 = time.perf_counter()
+    plans = planner.plan_many(reqs)
+    cold_s = time.perf_counter() - t0
+    cold_stats = planner.stats()
+
+    # ---- deterministic per-family rows ---------------------------------
+    rows: List[Dict] = []
+    by_family: "dict[str, list]" = {}
+    for r, p in zip(reqs, plans):
+        by_family.setdefault(_family_of(r.tag), []).append((r, p))
+    for family, pairs in by_family.items():
+        classes = len({_class_of(r.tag) for r, _ in pairs})
+        scheds = Counter(p.result.schedule.describe() for _, p in pairs)
+        prof = pairs[0][1].profile
+        rows.append({
+            "family": family,
+            "n_fleets": len(pairs),
+            "M": getattr(prof, "num_devices", 1),
+            "E": 1,
+            "layers": prof.num_layers,
+            "classes": classes,
+            "distinct_schedules": len(scheds),
+            "schedule_mode": scheds.most_common(1)[0][0],
+            # Identical fleets within a class make every non-first
+            # request of a class a cache hit on the cold pass.
+            "hit_rate_cold": 1.0 - classes / len(pairs),
+        })
+
+    payload: Dict = {
+        "benchmark": "fig_planner",
+        "n_fleets": POP_N,
+        "seed": POP_SEED,
+        "rows": rows,
+        "cache": {"hits": cold_stats["hits"],
+                  "misses": cold_stats["misses"],
+                  "hit_rate": cold_stats["hit_rate"],
+                  "pad_waste": cold_stats["pad_waste"],
+                  "lp_calls": cold_stats["lp_calls"]},
+    }
+    if not include_timing:
+        return payload
+
+    # ---- per-fleet loop baseline (stratified subsample, extrapolated) --
+    baseline_s = 0.0
+    for family, pairs in by_family.items():
+        sample = pairs[:BASELINE_SAMPLE]
+        t0 = time.perf_counter()
+        for r, p in sample:
+            ref = plan(r.model, r.fleet, r.B, objective=r.objective)
+            assert ref.result.schedule == p.result.schedule, \
+                f"planner diverged from api.plan on {r.tag}"
+        dt = time.perf_counter() - t0
+        baseline_s += dt / len(sample) * len(pairs)
+
+    # ---- warm cache-hit latency ----------------------------------------
+    stride = max(1, len(reqs) // HIT_SAMPLE)
+    probes = reqs[::stride][:HIT_SAMPLE]
+    lat_us = []
+    for r in probes:
+        t0 = time.perf_counter()
+        planner.plan_many([r])
+        lat_us.append((time.perf_counter() - t0) * 1e6)
+    lat = np.asarray(lat_us)
+
+    speedup = baseline_s / cold_s
+    assert speedup >= MIN_SPEEDUP, \
+        (f"batched planner only {speedup:.1f}x over the per-fleet loop "
+         f"(floor {MIN_SPEEDUP}x)")
+    payload.update({
+        "cold_s": cold_s,
+        "plans_per_s": POP_N / cold_s,
+        "baseline_sample_per_family": BASELINE_SAMPLE,
+        "baseline_s_extrapolated": baseline_s,
+        "speedup_vs_loop": speedup,
+        "hit_p50_us": float(np.percentile(lat, 50)),
+        "hit_p99_us": float(np.percentile(lat, 99)),
+        "hit_probes": len(probes),
+    })
+    return payload
+
+
+def run() -> str:
+    payload = measure()
+    out = table(payload["rows"],
+                ["family", "n_fleets", "M", "layers", "classes",
+                 "distinct_schedules", "hit_rate_cold"],
+                f"Cross-fleet planner — {POP_N} perturbed fleets, "
+                f"seed {POP_SEED}")
+    c = payload["cache"]
+    lines = [
+        out, "",
+        f"cold pass: {payload['cold_s']:.2f}s "
+        f"({payload['plans_per_s']:.0f} plans/s), cache hit rate "
+        f"{c['hit_rate']:.3f} ({c['hits']} hits / {c['misses']} misses), "
+        f"pad waste {c['pad_waste']:.4f}",
+        f"per-fleet loop (extrapolated from {payload['baseline_sample_per_family']}"
+        f"/family): {payload['baseline_s_extrapolated']:.1f}s -> "
+        f"{payload['speedup_vs_loop']:.1f}x speedup",
+        f"cache-hit latency: p50 {payload['hit_p50_us']:.0f}us / "
+        f"p99 {payload['hit_p99_us']:.0f}us over "
+        f"{payload['hit_probes']} probes",
+    ]
+    return "\n".join(lines)
+
+
+def run_json(include_timing: bool = True) -> Dict:
+    """Payload for BENCH_sched.json; ``include_timing=False`` keeps only
+    the deterministic fields (the CI drift-check mode)."""
+    return measure(include_timing=include_timing)
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,6 +1,12 @@
 """Benchmark orchestrator: one section per paper table/figure, plus the
 roofline report if dry-run results exist.  ``python -m benchmarks.run``.
 
+``--section NAME`` restricts any mode to one section (see ``--help`` for
+the section names): alone it runs just that section's report; with
+``--json`` it recomputes only that section's subtree and merges it into
+the existing artifact; with ``--check-schedules`` it drift-checks only
+that section's deterministic fields.
+
 ``--json [PATH]`` switches to perf-tracking mode: instead of printing every
 section it re-times the Table II scheduler search with both backends
 (reference scalar simplex vs batched engine) plus the M-device sweep
@@ -8,8 +14,9 @@ section it re-times the Table II scheduler search with both backends
 (``benchmarks/fig_tree``), the pipelined steady-state sweep
 (``benchmarks/fig_pipeline``), the LM-fleet LayerStack sweep
 (``benchmarks/fig_lm_fleet``), the elastic-fleet churn benchmark
-(``benchmarks/fig_churn``) and the wire-compression sweep
-(``benchmarks/fig_wire``), and writes runtimes, speedups, periods and
+(``benchmarks/fig_churn``), the wire-compression sweep
+(``benchmarks/fig_wire``) and the cross-fleet planner benchmark
+(``benchmarks/fig_planner``), and writes runtimes, speedups, periods and
 the chosen schedules to ``BENCH_sched.json`` (or PATH), so the
 scheduler-engine perf trajectory is tracked across PRs.  Every record is
 stamped with the git SHA (``+dirty`` when regenerated before the commit it
@@ -63,35 +70,70 @@ _DET_KEYS = {
                    "lps_pruned_cold", "wall_elastic", "wall_static",
                    "recovery_s", "loss_elastic", "loss_static"),
     "churn.resume": ("M", "fail_at", "resumed_from", "bitwise_equal"),
+    "planner.rows": ("family", "n_fleets", "M", "E", "layers", "classes",
+                     "distinct_schedules", "schedule_mode",
+                     "hit_rate_cold"),
+}
+
+# Section registry: key -> (title, module name, BENCH_sched.json subtree
+# key or None, det-check section names).  ``"."`` as subtree key means
+# the section's run_json() produces the payload's top level (Table II).
+_SECTIONS = {
+    "fig6": ("Fig.6 model validity", "fig6_model_validity", None, ()),
+    "speedup": ("Fig.7/8 vs All-Edge/All-Cloud", "fig7_8_speedup",
+                None, ()),
+    "sota": ("Fig.9/10 vs JointDNN/JointDNN+/JALAD", "fig9_10_sota",
+             None, ()),
+    "edge_cpu": ("Fig.11 edge CPU scaling", "fig11_edge_cpu", None, ()),
+    "table2": ("Table II scheduler runtime", "table2_sched_runtime",
+               ".", ("rows",)),
+    "multidevice": ("M-device sweep (beyond the paper)",
+                    "fig_multidevice", "multidevice", ("multidevice",)),
+    "tree": ("Multi-edge tree sweep (beyond the paper)", "fig_tree",
+             "tree", ("tree.rows",)),
+    "pipeline": ("Pipelined steady state (T_period)", "fig_pipeline",
+                 "pipeline", ("pipeline.table2", "pipeline.fleet")),
+    "lm_fleet": ("LM fleet via LayerStack (beyond the paper)",
+                 "fig_lm_fleet", "lm_fleet", ("lm_fleet",)),
+    "churn": ("Elastic fleet churn (beyond the paper)", "fig_churn",
+              "churn", ("churn.rows", "churn.resume")),
+    "wire": ("Wire compression (beyond the paper)", "fig_wire",
+             "wire", ("wire.rows",)),
+    "planner": ("Cross-fleet planner (beyond the paper)", "fig_planner",
+                "planner", ("planner.rows",)),
+    "roofline": ("Roofline report (from dry-run)", "roofline_report",
+                 None, ()),
+}
+
+# Path of each det-check section inside the committed JSON payload.
+_DET_PATHS = {
+    "rows": ("rows",),
+    "multidevice": ("multidevice",),
+    "tree.rows": ("tree", "rows"),
+    "pipeline.table2": ("pipeline", "table2"),
+    "pipeline.fleet": ("pipeline", "fleet"),
+    "lm_fleet": ("lm_fleet",),
+    "wire.rows": ("wire", "rows"),
+    "churn.rows": ("churn", "rows"),
+    "churn.resume": ("churn", "resume"),
+    "planner.rows": ("planner", "rows"),
 }
 
 
-def run_sections() -> int:
-    from benchmarks import (fig6_model_validity, fig7_8_speedup,
-                            fig9_10_sota, fig11_edge_cpu, fig_churn,
-                            fig_lm_fleet, fig_multidevice, fig_pipeline,
-                            fig_tree, fig_wire, roofline_report,
-                            table2_sched_runtime)
-    sections = [
-        ("Fig.6 model validity", fig6_model_validity.run),
-        ("Fig.7/8 vs All-Edge/All-Cloud", fig7_8_speedup.run),
-        ("Fig.9/10 vs JointDNN/JointDNN+/JALAD", fig9_10_sota.run),
-        ("Fig.11 edge CPU scaling", fig11_edge_cpu.run),
-        ("Table II scheduler runtime", table2_sched_runtime.run),
-        ("M-device sweep (beyond the paper)", fig_multidevice.run),
-        ("Multi-edge tree sweep (beyond the paper)", fig_tree.run),
-        ("Pipelined steady state (T_period)", fig_pipeline.run),
-        ("LM fleet via LayerStack (beyond the paper)", fig_lm_fleet.run),
-        ("Elastic fleet churn (beyond the paper)", fig_churn.run),
-        ("Wire compression (beyond the paper)", fig_wire.run),
-        ("Roofline report (from dry-run)", roofline_report.run),
-    ]
+def _module(name: str):
+    import importlib
+    return importlib.import_module(f"benchmarks.{name}")
+
+
+def run_sections(only: str = None) -> int:
+    keys = [only] if only else list(_SECTIONS)
     failures = 0
-    for name, fn in sections:
+    for key in keys:
+        title, mod_name, _, _ = _SECTIONS[key]
         t0 = time.perf_counter()
-        print(f"\n{'='*72}\n== {name}\n{'='*72}")
+        print(f"\n{'='*72}\n== {title}\n{'='*72}")
         try:
-            print(fn())
+            print(_module(mod_name).run())
             print(f"-- done in {time.perf_counter() - t0:.1f}s")
         except Exception as e:                      # pragma: no cover
             failures += 1
@@ -101,68 +143,112 @@ def run_sections() -> int:
     return 1 if failures else 0
 
 
-def _build_payload(include_reference: bool = True) -> dict:
-    from benchmarks import fig_churn, fig_lm_fleet, fig_multidevice, \
-        fig_pipeline, fig_tree, fig_wire, table2_sched_runtime
-    payload = table2_sched_runtime.run_json(include_reference)
-    payload["multidevice"] = fig_multidevice.run_json()
-    payload["tree"] = {"rows": fig_tree.run_json()}
-    payload["pipeline"] = fig_pipeline.run_json()
-    payload["lm_fleet"] = fig_lm_fleet.run_json()
-    payload["churn"] = fig_churn.run_json()
-    # exec timings ride only on full --json runs; the drift check needs
-    # just the deterministic planning rows
-    payload["wire"] = fig_wire.run_json(include_exec=include_reference)
+def _json_value(key: str, include_reference: bool):
+    """One section's BENCH_sched.json subtree, freshly recomputed."""
+    mod = _module(_SECTIONS[key][1])
+    if key == "table2":
+        return mod.run_json(include_reference)
+    if key == "tree":
+        return {"rows": mod.run_json()}
+    if key == "wire":
+        # exec timings ride only on full --json runs; the drift check
+        # needs just the deterministic planning rows
+        return mod.run_json(include_exec=include_reference)
+    if key == "planner":
+        return mod.run_json(include_timing=include_reference)
+    return mod.run_json()
+
+
+def _json_keys(only: str = None) -> list:
+    keys = [only] if only else list(_SECTIONS)
+    return [k for k in keys if _SECTIONS[k][2] is not None]
+
+
+def _build_payload(include_reference: bool = True, only: str = None,
+                   base: dict = None) -> dict:
+    payload = dict(base or {})
+    for key in _json_keys(only):
+        subtree = _SECTIONS[key][2]
+        value = _json_value(key, include_reference)
+        if subtree == ".":
+            payload.update(value)
+        else:
+            payload[subtree] = value
     return payload
 
 
-def run_sched_json(path: str) -> int:
+def _print_json_summary(payload: dict, keys: list) -> None:
+    if "table2" in keys:
+        for r in payload["rows"]:
+            print(f"  {r['network']:>10} (N={r['layers']:>2}): "
+                  f"reference {r['reference_s']:.3f}s -> "
+                  f"batched {r['batched_s']:.3f}s "
+                  f"({r['speedup']:.1f}x, {r['pruned']} of "
+                  f"{r['candidates']} LPs pruned)")
+        if "min_speedup_n_ge_16" in payload:
+            print(f"  min speedup for N >= 16: "
+                  f"{payload['min_speedup_n_ge_16']:.1f}x")
+    if "multidevice" in keys:
+        for r in payload["multidevice"]:
+            print(f"  M={r['M']}: sched {r['sched_s']*1e3:.0f}ms "
+                  f"T_total {r['t_total']:.3f}s sim {r['t_sim']:.3f}s "
+                  f"(rel err {r['sim_rel_err']:.1%}) "
+                  f"speedup vs all-edge {r['speedup_all_edge']:.2f}x "
+                  f"/ all-cloud {r['speedup_all_cloud']:.2f}x")
+    if "tree" in keys:
+        for r in payload["tree"]["rows"]:
+            print(f"  tree {r['model']:>7} E={r['E']}: sched "
+                  f"{r['sched_s']*1e3:.0f}ms T_total {r['t_total']:.3f}s "
+                  f"sim {r['t_sim']:.3f}s (rel err {r['sim_rel_err']:.1%}) "
+                  f"speedup vs star {r['speedup_vs_star']:.2f}x")
+    if "pipeline" in keys:
+        for r in payload["pipeline"]["fleet"]:
+            print(f"  pipeline M={r['M']}: T_period latency-opt "
+                  f"{r['t_period_lat']:.3f}s -> throughput-opt "
+                  f"{r['t_period_thr']:.3f}s ({r['period_gain']:.2f}x)")
+    if "lm_fleet" in keys:
+        for r in payload["lm_fleet"]:
+            print(f"  lm {r['family']:>9} M={r['M']}: T_total "
+                  f"{r['t_total']:.2f}s (sim err {r['sim_rel_err']:.1%}) "
+                  f"vs all-edge {r['speedup_all_edge']:.2f}x / all-cloud "
+                  f"{r['speedup_all_cloud']:.2f}x")
+    if "wire" in keys:
+        for r in payload["wire"]["rows"]:
+            print(f"  wire {r['family']:>9} M={r['M']}: T_total "
+                  f"{r['t_total_none']:.2f}s -> int8 "
+                  f"{r['t_total_int8']:.2f}s ({r['wire_gain']:.2f}x), "
+                  f"cut shifted {r['cut_shifted']}")
+    if "churn" in keys:
+        for r in payload["churn"]["rows"]:
+            print(f"  churn M={r['M']}: {r['n_events']} events, recovery "
+                  f"{r['recovery_s']:.2f}s, warm/cold prune "
+                  f"{r['lps_pruned_warm']}/{r['lps_pruned_cold']}, "
+                  f"warm==cold {r['warm_equals_cold']}")
+        for r in payload["churn"]["resume"]:
+            print(f"  resume M={r['M']}: from step {r['resumed_from']}, "
+                  f"bitwise {r['bitwise_equal']} "
+                  f"({r['resume_s']:.1f}s)")
+    if "planner" in keys:
+        p = payload["planner"]
+        c = p["cache"]
+        print(f"  planner: {p['n_fleets']} fleets, cold "
+              f"{p['cold_s']:.2f}s ({p['plans_per_s']:.0f} plans/s, "
+              f"{p['speedup_vs_loop']:.1f}x vs per-fleet loop), hit rate "
+              f"{c['hit_rate']:.3f}, hit p50/p99 "
+              f"{p['hit_p50_us']:.0f}/{p['hit_p99_us']:.0f}us")
+
+
+def run_sched_json(path: str, only: str = None) -> int:
     from benchmarks.common import write_json
-    payload = _build_payload()
+    base = None
+    if only:
+        # --section merge mode: recompute one subtree in place.
+        with open(path) as f:
+            base = json.load(f)
+    payload = _build_payload(only=only, base=base)
     write_json(path, payload)
-    rows = payload["rows"]
-    print(f"wrote {path}")
-    for r in rows:
-        print(f"  {r['network']:>10} (N={r['layers']:>2}): "
-              f"reference {r['reference_s']:.3f}s -> "
-              f"batched {r['batched_s']:.3f}s "
-              f"({r['speedup']:.1f}x, {r['pruned']} of "
-              f"{r['candidates']} LPs pruned)")
-    print(f"  min speedup for N >= 16: "
-          f"{payload['min_speedup_n_ge_16']:.1f}x")
-    for r in payload["multidevice"]:
-        print(f"  M={r['M']}: sched {r['sched_s']*1e3:.0f}ms "
-              f"T_total {r['t_total']:.3f}s sim {r['t_sim']:.3f}s "
-              f"(rel err {r['sim_rel_err']:.1%}) "
-              f"speedup vs all-edge {r['speedup_all_edge']:.2f}x "
-              f"/ all-cloud {r['speedup_all_cloud']:.2f}x")
-    for r in payload["tree"]["rows"]:
-        print(f"  tree {r['model']:>7} E={r['E']}: sched "
-              f"{r['sched_s']*1e3:.0f}ms T_total {r['t_total']:.3f}s "
-              f"sim {r['t_sim']:.3f}s (rel err {r['sim_rel_err']:.1%}) "
-              f"speedup vs star {r['speedup_vs_star']:.2f}x")
-    for r in payload["pipeline"]["fleet"]:
-        print(f"  pipeline M={r['M']}: T_period latency-opt "
-              f"{r['t_period_lat']:.3f}s -> throughput-opt "
-              f"{r['t_period_thr']:.3f}s ({r['period_gain']:.2f}x)")
-    for r in payload["lm_fleet"]:
-        print(f"  lm {r['family']:>9} M={r['M']}: T_total {r['t_total']:.2f}s "
-              f"(sim err {r['sim_rel_err']:.1%}) vs all-edge "
-              f"{r['speedup_all_edge']:.2f}x / all-cloud "
-              f"{r['speedup_all_cloud']:.2f}x")
-    for r in payload["wire"]["rows"]:
-        print(f"  wire {r['family']:>9} M={r['M']}: T_total "
-              f"{r['t_total_none']:.2f}s -> int8 {r['t_total_int8']:.2f}s "
-              f"({r['wire_gain']:.2f}x), cut shifted {r['cut_shifted']}")
-    for r in payload["churn"]["rows"]:
-        print(f"  churn M={r['M']}: {r['n_events']} events, recovery "
-              f"{r['recovery_s']:.2f}s, warm/cold prune "
-              f"{r['lps_pruned_warm']}/{r['lps_pruned_cold']}, "
-              f"warm==cold {r['warm_equals_cold']}")
-    for r in payload["churn"]["resume"]:
-        print(f"  resume M={r['M']}: from step {r['resumed_from']}, "
-              f"bitwise {r['bitwise_equal']} "
-              f"({r['resume_s']:.1f}s)")
+    print(f"wrote {path}" + (f" (section {only})" if only else ""))
+    _print_json_summary(payload, _json_keys(only))
     return 0
 
 
@@ -181,32 +267,24 @@ def _close(a, b) -> bool:
     return a == b
 
 
-def check_schedules(path: str) -> int:
+def _lookup(payload: dict, det_section: str) -> list:
+    node = payload
+    for part in _DET_PATHS[det_section]:
+        node = node.get(part, {}) if isinstance(node, dict) else {}
+    return node if isinstance(node, list) else []
+
+
+def check_schedules(path: str, only: str = None) -> int:
     """Recompute deterministic schedule fields; fail on drift from
     ``path`` (the committed artifact)."""
     with open(path) as f:
         committed = json.load(f)
-    fresh = _build_payload(include_reference=False)
-    sections = {
-        "rows": (committed.get("rows", []), fresh["rows"]),
-        "multidevice": (committed.get("multidevice", []),
-                        fresh["multidevice"]),
-        "tree.rows": (committed.get("tree", {}).get("rows", []),
-                      fresh["tree"]["rows"]),
-        "pipeline.table2": (committed.get("pipeline", {}).get("table2", []),
-                            fresh["pipeline"]["table2"]),
-        "pipeline.fleet": (committed.get("pipeline", {}).get("fleet", []),
-                           fresh["pipeline"]["fleet"]),
-        "lm_fleet": (committed.get("lm_fleet", []), fresh["lm_fleet"]),
-        "wire.rows": (committed.get("wire", {}).get("rows", []),
-                      fresh["wire"]["rows"]),
-        "churn.rows": (committed.get("churn", {}).get("rows", []),
-                       fresh["churn"]["rows"]),
-        "churn.resume": (committed.get("churn", {}).get("resume", []),
-                         fresh["churn"]["resume"]),
-    }
+    fresh = _build_payload(include_reference=False, only=only)
+    det_sections = [s for k in _json_keys(only) for s in _SECTIONS[k][3]]
     drift = 0
-    for name, (old, new) in sections.items():
+    for name in det_sections:
+        old = _lookup(committed, name)
+        new = _lookup(fresh, name)
         old_v, new_v = _det_view(name, old), _det_view(name, new)
         # A guarded key missing from the *recomputed* rows means _DET_KEYS
         # went stale against the benchmark code — fail loudly instead of
@@ -250,12 +328,17 @@ def main() -> None:
                         metavar="PATH",
                         help="recompute the deterministic schedule fields "
                              "and exit non-zero if they drift from PATH")
+    parser.add_argument("--section", default=None, choices=list(_SECTIONS),
+                        help="restrict to one section: report mode runs "
+                             "just it; --json merges only its subtree "
+                             "into the existing artifact; "
+                             "--check-schedules drift-checks only it")
     args = parser.parse_args()
     if args.check_schedules is not None:
-        sys.exit(check_schedules(args.check_schedules))
+        sys.exit(check_schedules(args.check_schedules, only=args.section))
     if args.json is not None:
-        sys.exit(run_sched_json(args.json))
-    sys.exit(run_sections())
+        sys.exit(run_sched_json(args.json, only=args.section))
+    sys.exit(run_sections(only=args.section))
 
 
 if __name__ == "__main__":

@@ -21,11 +21,11 @@ until the facade is touched).
 """
 from __future__ import annotations
 
-__all__ = ["Fleet", "Plan", "plan", "as_layerstack"]
+__all__ = ["Fleet", "Plan", "plan", "plan_many", "as_layerstack"]
 
 
 def __getattr__(name):
-    if name in ("Fleet", "Plan", "plan"):
+    if name in ("Fleet", "Plan", "plan", "plan_many"):
         from repro import api
         return getattr(api, name)
     if name == "as_layerstack":

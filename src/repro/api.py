@@ -300,6 +300,28 @@ class Plan:
         return "\n".join(lines)
 
 
+def _prepare(model, fleet: Fleet, wire: Optional[str]):
+    """Shared plan-request prep: resolve the wire codec, adapt the model
+    to a :class:`LayerStack`, build the wire-adjusted profile and the
+    native network.  Used by :func:`plan` and by the cross-fleet planner
+    (``repro.serve.planner``), so both see identical solver inputs."""
+    from repro.core.wire import apply_wire, validate_wire
+    wire = fleet.wire if wire is None else validate_wire(wire)
+    stack = as_layerstack(model) if model is not None else None
+    profile = apply_wire(fleet.profile_for(stack), stack, wire)
+    net = fleet.network()
+    return stack, profile, net, wire
+
+
+def plan_many(requests, **kwargs):
+    """Batch front door: plan many fleets in shared tableau stacks with a
+    fingerprinted plan cache (``repro.serve.planner``, DESIGN.md §13).
+    Takes :class:`repro.serve.planner.PlanRequest` items (or anything the
+    planner coerces); returns plans in request order."""
+    from repro.serve import planner as _planner
+    return _planner.plan_many(requests, **kwargs)
+
+
 def plan(model, fleet: Fleet, B: int, *, objective: str = "latency",
          pipeline_depth: int = 1, backend: str = "batched",
          wire: Optional[str] = None,
@@ -331,11 +353,7 @@ def plan(model, fleet: Fleet, B: int, *, objective: str = "latency",
     """
     if pipeline_depth < 1:
         raise ValueError("pipeline_depth must be >= 1")
-    from repro.core.wire import apply_wire, validate_wire
-    wire = fleet.wire if wire is None else validate_wire(wire)
-    stack = as_layerstack(model) if model is not None else None
-    profile = apply_wire(fleet.profile_for(stack), stack, wire)
-    net = fleet.network()
+    stack, profile, net, wire = _prepare(model, fleet, wire)
     if fleet.topology == TRIPLE:
         result = _scheduler._solve_3w(
             profile, net, B, keep_log=keep_log, backend=backend,

@@ -1,22 +1,22 @@
 """HierTrain core — cost model, scheduler, execution engine, DES.
 
 Public surface (re-exported here and from ``repro``): ``Fleet``,
-``Plan``, ``plan``, ``as_layerstack`` — see DESIGN.md §9 for the API
-map.  The submodules are internal: the canonical engines live under
+``Plan``, ``plan``, ``plan_many``, ``as_layerstack`` — see DESIGN.md §9
+for the API map.  The submodules are internal: the canonical engines live under
 private names (``scheduler._solve_3w`` / ``_solve_multi``,
 ``cost_model._t_total*``, ``simulator._simulate_iteration*``) and the
 historical public names are deprecation shims over the facade.
 """
 from __future__ import annotations
 
-__all__ = ["Fleet", "Plan", "plan", "as_layerstack"]
+__all__ = ["Fleet", "Plan", "plan", "plan_many", "as_layerstack"]
 
 
 def __getattr__(name):
     if name == "Fleet":
         from repro.core.fleet import Fleet
         return Fleet
-    if name in ("Plan", "plan"):
+    if name in ("Plan", "plan", "plan_many"):
         from repro import api
         return getattr(api, name)
     if name == "as_layerstack":

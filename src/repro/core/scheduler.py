@@ -36,7 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -80,8 +80,15 @@ def _round_batch_split(b_real: np.ndarray, B: int,
     allowed); a floor *overshoot* (LP numerics handing out more than ``B``
     units) is stripped from the largest entries without driving any entry
     below zero, so the result always satisfies ``sum == B`` and ``>= 0``.
+
+    Entries are clamped to ``[0, B]`` up front: every feasible LP point
+    satisfies that bound already (Eq. 17 plus nonnegativity), so real
+    solutions are untouched, while a failed lane's garbage ``x`` (e.g. a
+    phase-2 ray) can no longer make the one-unit strip loop crawl for
+    millions of iterations — such lanes are discarded by the caller's
+    success mask anyway, but they must still round in bounded time.
     """
-    b_real = np.clip(np.asarray(b_real, np.float64), 0.0, None)
+    b_real = np.clip(np.asarray(b_real, np.float64), 0.0, float(B))
     allowed = np.asarray(allowed, bool)
     b_real = np.where(allowed, b_real, 0.0)
     ints = np.floor(b_real + 1e-9).astype(np.int64)
@@ -111,10 +118,11 @@ def _round_batch_split_batch(b_real: np.ndarray, B: int,
                              allowed: np.ndarray) -> np.ndarray:
     """Vectorized :func:`_round_batch_split` over ``[K, 3]`` splits.
     Semantics match the scalar rule exactly (same stable largest-fraction
-    order, same residue handling), so both backends round identically."""
+    order, same residue handling, same ``[0, B]`` clamp), so both
+    backends round identically."""
     K = b_real.shape[0]
     ar = np.arange(K)
-    b = np.clip(np.asarray(b_real, np.float64), 0.0, None)
+    b = np.clip(np.asarray(b_real, np.float64), 0.0, float(B))
     b = np.where(allowed, b, 0.0)
     ints = np.floor(b + 1e-9).astype(np.int64)
     fracs = np.where(allowed, b - ints, -1.0)
@@ -341,22 +349,48 @@ def _warm_ok(totals_win: float, incumbent: float) -> bool:
     return totals_win <= incumbent
 
 
-def _solve_batched(profile: HierProfile, net: Network, B: int, origin: str,
-                   workers: Tuple[str, ...], keep_log: bool,
-                   prune: bool, objective: str = "latency",
-                   warm_start: Optional[Schedule] = None) -> SchedulerResult:
+def _score_3w(profile: HierProfile, net: Network, objective: str,
+              origin: str, o, s, l, mss, mll, bb) -> np.ndarray:
+    """Objective scores of K rounded 3-worker candidates (exact eval)."""
+    if objective == "latency":
+        return _t_total_batch(profile, net, o, s, l, mss, mll, bb, origin)
+    return pipeline_mod.t_period_batch(profile, net, o, s, l, mss, mll,
+                                       bb, origin)
+
+
+@dataclasses.dataclass
+class _StageA3W:
+    """One 3-worker fleet's pruned stage-A candidate lanes + LP stack.
+
+    Built by :func:`_stage_a_3w`, consumed by :func:`_finish_3w`; the
+    cross-fleet engine (:func:`solve_many`) concatenates many fleets'
+    ``stack`` tensors into one padded simplex call.
+    """
+    profile: HierProfile
+    net: Network
+    B: int
+    origin: str
+    objective: str
+    warm: bool                 # prune ran with a warm incumbent
+    ko: np.ndarray
+    ks: np.ndarray
+    kl: np.ndarray
+    kms: np.ndarray
+    kml: np.ndarray
+    K: int
+    n_pruned: int
+    incumbent: float
+    stack: Tuple[np.ndarray, ...]   # (cost, A_ub, b_ub, A_eq, b_eq)
+
+
+def _stage_a_3w(profile: HierProfile, net: Network, B: int, origin: str,
+                workers: Tuple[str, ...], prune: bool, objective: str,
+                warm_start: Optional[Schedule]) -> _StageA3W:
     N = profile.num_layers
     p = profile.prefix()
     F, Bk, U = p["F"], p["Bk"], p["U"]
     o_idx, s_idx, l_idx, ms, ml = _candidate_grid(N, workers)
     K = o_idx.shape[0]
-
-    def score_batch(o, s, l, mss, mll, bb):
-        if objective == "latency":
-            return _t_total_batch(profile, net, o, s, l, mss, mll,
-                                  bb, origin)
-        return pipeline_mod.t_period_batch(profile, net, o, s, l, mss, mll,
-                                           bb, origin)
 
     # Dominance pruning: the T^3 + T_update terms of Eq. (12) do not depend
     # on the batch split, so  B*(F_o[N]-F_o[ml]) + B*(Bk_o[N]-Bk_o[ml]) +
@@ -376,9 +410,10 @@ def _solve_batched(profile: HierProfile, net: Network, B: int, origin: str,
         trivial = (ms == 0) & (ml == 0)
         b_triv = np.zeros((int(trivial.sum()), 3), np.int64)
         b_triv[:, 0] = B
-        incumbent = score_batch(o_idx[trivial], s_idx[trivial],
-                                l_idx[trivial], ms[trivial], ml[trivial],
-                                b_triv).min()
+        incumbent = _score_3w(profile, net, objective, origin,
+                              o_idx[trivial], s_idx[trivial],
+                              l_idx[trivial], ms[trivial], ml[trivial],
+                              b_triv).min()
         if warm_start is not None:
             # Warm incumbent: the live schedule's exact cost on this
             # fleet (the incremental re-solve of DESIGN.md §10).
@@ -396,19 +431,33 @@ def _solve_batched(profile: HierProfile, net: Network, B: int, origin: str,
     kms, kml = ms[keep], ml[keep]
     A_ub, b_ub, A_eq, b_eq = _build_lp_stack(profile, net, ko, ks, kl,
                                              kms, kml, B, origin)
-    res = batched_lp.linprog_batch(_LP_COST, A_ub, b_ub, A_eq, b_eq)
+    return _StageA3W(profile=profile, net=net, B=B, origin=origin,
+                     objective=objective,
+                     warm=prune and warm_start is not None,
+                     ko=ko, ks=ks, kl=kl, kms=kms, kml=kml, K=K,
+                     n_pruned=n_pruned, incumbent=incumbent,
+                     stack=(_LP_COST, A_ub, b_ub, A_eq, b_eq))
 
-    ok = res.success
+
+def _finish_3w(st: _StageA3W, x: np.ndarray, ok: np.ndarray,
+               keep_log: bool) -> Optional[SchedulerResult]:
+    """Round, score and argmin one fleet's solved stage-A lanes.
+
+    Returns ``None`` when a warm incumbent over-pruned (the caller must
+    re-solve cold — bit-identity over speed, DESIGN.md §10).
+    """
+    profile, net, B, origin = st.profile, st.net, st.B, st.origin
+    ko, ks, kl, kms, kml = st.ko, st.ks, st.kl, st.kms, st.kml
     allowed = np.stack([np.ones_like(kms, bool), kms > 0, kml > 0], axis=1)
-    b_int = _round_batch_split_batch(res.x[:, :3], B, allowed)
-    totals = score_batch(ko, ks, kl, kms, kml, b_int)
+    b_int = _round_batch_split_batch(x[:, :3], B, allowed)
+    totals = _score_3w(profile, net, st.objective, origin,
+                       ko, ks, kl, kms, kml, b_int)
     totals = np.where(ok, totals, np.inf)
-    if prune and warm_start is not None and \
-            not (ok.any() and _warm_ok(float(totals.min()), incumbent)):
+    if st.warm and not (ok.any() and
+                        _warm_ok(float(totals.min()), st.incumbent)):
         # The warm incumbent over-pruned (the live schedule beat every
         # surviving lane) — bit-identity over speed: re-solve cold.
-        return _solve_batched(profile, net, B, origin, workers, keep_log,
-                              prune, objective, warm_start=None)
+        return None
     assert ok.any(), "every per-cut LP failed — inconsistent profile?"
     win = int(np.argmin(totals))  # first min == reference's sequential <
 
@@ -426,11 +475,25 @@ def _solve_batched(profile: HierProfile, net: Network, B: int, origin: str,
                 int(kms[k]), int(kml[k]), int(b_int[k, 0]),
                 int(b_int[k, 1]), int(b_int[k, 2])), float(totals[k])))
     return SchedulerResult(schedule=sched, breakdown=bd, t_total=bd.total,
-                           n_lp_solved=int(keep.sum()), search_log=log,
-                           n_candidates=K, n_pruned=n_pruned,
-                           objective=objective,
+                           n_lp_solved=int(ko.shape[0]), search_log=log,
+                           n_candidates=st.K, n_pruned=st.n_pruned,
+                           objective=st.objective,
                            t_period=pipeline_mod.t_period(profile, net,
                                                           sched, origin))
+
+
+def _solve_batched(profile: HierProfile, net: Network, B: int, origin: str,
+                   workers: Tuple[str, ...], keep_log: bool,
+                   prune: bool, objective: str = "latency",
+                   warm_start: Optional[Schedule] = None) -> SchedulerResult:
+    st = _stage_a_3w(profile, net, B, origin, workers, prune, objective,
+                     warm_start)
+    res = batched_lp.linprog_batch(*st.stack)
+    out = _finish_3w(st, res.x, res.success, keep_log)
+    if out is None:
+        return _solve_batched(profile, net, B, origin, workers, keep_log,
+                              prune, objective, warm_start=None)
+    return out
 
 
 def _solve_3w(profile: HierProfile, net: Network, B: int,
@@ -707,6 +770,57 @@ def _solve_multi(profile: MultiProfile, net: StarNetwork, B: int,
         raise ValueError(f"unknown scheduler backend: {backend!r}")
     if objective not in OBJECTIVES:
         raise ValueError(f"unknown scheduler objective: {objective!r}")
+    st = _stage_a_multi(profile, net, B, prune, objective, warm_start)
+    x, ok = _solve_multi_lps(*st.stack, backend)
+    search = _finish_multi(st, x, ok, keep_log, refine_passes)
+    if search is None:
+        # The warm incumbent over-pruned (the live schedule beat every
+        # surviving lane) — bit-identity over speed: re-solve cold.
+        return _solve_multi(profile, net, B, keep_log, backend, prune,
+                            refine_passes, objective, warm_start=None)
+    while True:
+        stack = search.next_stack()
+        if stack is None:
+            break
+        x, ok = _solve_multi_lps(*stack, backend)
+        search.step(x, ok)
+    return search.result()
+
+
+def _score_multi(profile: MultiProfile, net: StarNetwork, objective: str,
+                 o, s, l, mss, mll, bb) -> np.ndarray:
+    """Objective scores of K rounded multi-device candidates (exact eval)."""
+    if objective == "latency":
+        return _t_total_multi_batch(profile, net, o, s, l, mss, mll, bb)
+    return pipeline_mod.t_period_multi_batch(profile, net, o, s, l,
+                                             mss, mll, bb)
+
+
+@dataclasses.dataclass
+class _StageAMulti:
+    """One star/tree fleet's pruned stage-A lanes + LP stack (multi analog
+    of :class:`_StageA3W`, consumed by :func:`_finish_multi`)."""
+    profile: MultiProfile
+    net: StarNetwork
+    B: int
+    objective: str
+    warm: bool
+    cost: np.ndarray
+    ko: np.ndarray
+    ks: np.ndarray
+    kl: np.ndarray
+    kms: np.ndarray
+    kml: np.ndarray
+    K: int
+    n_pruned: int
+    n_lp: int
+    incumbent: float
+    stack: Tuple[np.ndarray, ...]   # (cost, A_ub, b_ub, A_eq, b_eq)
+
+
+def _stage_a_multi(profile: MultiProfile, net: StarNetwork, B: int,
+                   prune: bool, objective: str,
+                   warm_start: Optional[MultiSchedule]) -> _StageAMulti:
     N = profile.num_layers
     M = profile.num_streams       # per-candidate stream count (slots for
     #                               every non-o/non-l worker: devices on a
@@ -718,13 +832,6 @@ def _solve_multi(profile: MultiProfile, net: StarNetwork, B: int,
         N, profile.worker_names)
     K = o_idx.shape[0]
     msmax = ms.max(axis=1)
-
-    def score_batch(o, s, l, mss, mll, bb):
-        if objective == "latency":
-            return _t_total_multi_batch(profile, net, o, s, l, mss, mll,
-                                        bb)
-        return pipeline_mod.t_period_multi_batch(profile, net, o, s, l,
-                                                 mss, mll, bb)
 
     keep = np.ones(K, bool)
     n_pruned = 0
@@ -740,9 +847,10 @@ def _solve_multi(profile: MultiProfile, net: StarNetwork, B: int,
         trivial = (msmax == 0) & (ml == 0)
         b_triv = np.zeros((int(trivial.sum()), M + 2), np.int64)
         b_triv[:, 0] = B
-        incumbent = score_batch(o_idx[trivial], s_idx[trivial],
-                                l_idx[trivial], ms[trivial], ml[trivial],
-                                b_triv).min()
+        incumbent = _score_multi(profile, net, objective,
+                                 o_idx[trivial], s_idx[trivial],
+                                 l_idx[trivial], ms[trivial], ml[trivial],
+                                 b_triv).min()
         if warm_start is not None:
             # Warm incumbent: the live schedule's exact cost on this
             # fleet (the incremental re-solve of DESIGN.md §10).
@@ -760,20 +868,131 @@ def _solve_multi(profile: MultiProfile, net: StarNetwork, B: int,
     ks, kms, kml = s_idx[keep], ms[keep], ml[keep]
     A_ub, b_ub, A_eq, b_eq = _build_multi_lp_stack(profile, net, ko, ks, kl,
                                                    kms, kml, B)
-    x, ok = _solve_multi_lps(cost, A_ub, b_ub, A_eq, b_eq, backend)
-    n_lp = int(keep.sum())
+    return _StageAMulti(profile=profile, net=net, B=B, objective=objective,
+                        warm=prune and warm_start is not None, cost=cost,
+                        ko=ko, ks=ks, kl=kl, kms=kms, kml=kml, K=K,
+                        n_pruned=n_pruned, n_lp=int(keep.sum()),
+                        incumbent=incumbent,
+                        stack=(cost, A_ub, b_ub, A_eq, b_eq))
 
+
+class _MultiRefine:
+    """Stage-B coordinate descent as an explicit (build, solve, step) state
+    machine, so the per-fleet loop in :func:`_solve_multi` and the
+    cross-fleet lockstep loop in :func:`solve_many` share one code path —
+    the per-pass operations are identical, hence results stay bit-identical.
+    """
+
+    def __init__(self, st: _StageAMulti, win: int,
+                 best_sched: MultiSchedule, best_score: float,
+                 log: List[Tuple[MultiSchedule, float]], keep_log: bool,
+                 refine_passes: int):
+        self.st = st
+        self.best_sched = best_sched
+        self.best_score = best_score   # objective value (latency or period)
+        self.log = log
+        self.keep_log = keep_log
+        self.rounds = 0
+        self.n_lp_refine = 0
+        M = st.profile.num_streams
+        # Stage B is a no-op at M == 1, where stage A is already exhaustive.
+        self._active = M >= 2 and refine_passes > 0
+        self._passes_left = refine_passes
+        if self._active:
+            self._cur_ms = np.array(best_sched.m_s, np.int64)
+            self._ml0 = int(best_sched.m_l)
+            self._ro = np.full(1, st.ko[win])
+            self._rs = st.ks[win][None, :]
+            self._rl = np.full(1, st.kl[win])
+
+    def next_stack(self) -> Optional[Tuple[np.ndarray, ...]]:
+        """Build the next pass's single-cut-move LP stack, or ``None`` when
+        refinement has converged / exhausted its pass budget."""
+        if not self._active or self._passes_left <= 0:
+            return None
+        M = self.st.profile.num_streams
+        cand = []
+        for i in range(M):
+            for c in range(self._ml0 + 1):
+                if c != self._cur_ms[i]:
+                    row = self._cur_ms.copy()
+                    row[i] = c
+                    cand.append(row)
+        if not cand:
+            self._active = False
+            return None
+        cms = np.stack(cand)
+        Kr = cms.shape[0]
+        self._cms = cms
+        self._ro_r, self._rl_r = np.repeat(self._ro, Kr), \
+            np.repeat(self._rl, Kr)
+        self._rs_r = np.repeat(self._rs, Kr, axis=0)
+        self._ml_r = np.full(Kr, self._ml0)
+        A_ub, b_ub, A_eq, b_eq = _build_multi_lp_stack(
+            self.st.profile, self.st.net, self._ro_r, self._rs_r,
+            self._rl_r, cms, self._ml_r, self.st.B)
+        return (self.st.cost, A_ub, b_ub, A_eq, b_eq)
+
+    def step(self, x: np.ndarray, ok: np.ndarray) -> None:
+        """Score the solved pass; accept a strict improvement or converge."""
+        st = self.st
+        cms, ml0 = self._cms, self._ml0
+        Kr = cms.shape[0]
+        M = st.profile.num_streams
+        self.n_lp_refine += Kr
+        self._passes_left -= 1
+        allowed = np.concatenate(
+            [np.ones((Kr, 1), bool), cms > 0,
+             np.full((Kr, 1), ml0 > 0)], axis=1)
+        b_int = _round_batch_split_batch(x[:, :M + 2], st.B, allowed)
+        tot = _score_multi(st.profile, st.net, st.objective, self._ro_r,
+                           self._rs_r, self._rl_r, cms, self._ml_r, b_int)
+        tot = np.where(ok, tot, np.inf)
+        k = int(np.argmin(tot))
+        self.rounds += 1
+        if not (tot[k] < self.best_score):     # strict improvement only
+            self._active = False
+            return
+        self.best_score = float(tot[k])
+        self.best_sched = _multi_schedule_from_lane(
+            st.profile, self._ro_r, self._rs_r, self._rl_r, cms, self._ml_r,
+            b_int, k)
+        self._cur_ms = np.array(self.best_sched.m_s, np.int64)
+        if self.keep_log:
+            self.log.append((self.best_sched, self.best_score))
+
+    def result(self) -> MultiSchedulerResult:
+        st = self.st
+        bd = _t_total_multi(st.profile, st.net, self.best_sched)
+        return MultiSchedulerResult(
+            schedule=self.best_sched, breakdown=bd, t_total=bd.total,
+            n_lp_solved=st.n_lp, search_log=self.log, n_candidates=st.K,
+            n_pruned=st.n_pruned, refine_rounds=self.rounds,
+            n_lp_refine=self.n_lp_refine, objective=st.objective,
+            t_period=pipeline_mod.t_period_multi(st.profile, st.net,
+                                                 self.best_sched))
+
+
+def _finish_multi(st: _StageAMulti, x: np.ndarray, ok: np.ndarray,
+                  keep_log: bool, refine_passes: int
+                  ) -> Optional[_MultiRefine]:
+    """Round/score/argmin one fleet's stage-A lanes; hand off to stage B.
+
+    Returns ``None`` when a warm incumbent over-pruned (caller re-solves
+    cold), else a :class:`_MultiRefine` primed with the stage-A winner.
+    """
+    profile, net, B = st.profile, st.net, st.B
+    ko, ks, kl, kms, kml = st.ko, st.ks, st.kl, st.kms, st.kml
+    M = profile.num_streams
     allowed = np.concatenate([np.ones((kms.shape[0], 1), bool), kms > 0,
                               (kml > 0)[:, None]], axis=1)
     b_int = _round_batch_split_batch(x[:, :M + 2], B, allowed)
-    totals = score_batch(ko, ks, kl, kms, kml, b_int)
+    totals = _score_multi(profile, net, st.objective,
+                          ko, ks, kl, kms, kml, b_int)
     totals = np.where(ok, totals, np.inf)
-    if prune and warm_start is not None and \
-            not (ok.any() and _warm_ok(float(totals.min()), incumbent)):
-        # The warm incumbent over-pruned (the live schedule beat every
-        # surviving lane) — bit-identity over speed: re-solve cold.
-        return _solve_multi(profile, net, B, keep_log, backend, prune,
-                            refine_passes, objective, warm_start=None)
+    if st.warm and not (ok.any() and
+                        _warm_ok(float(totals.min()), st.incumbent)):
+        return None
     assert ok.any(), "every per-cut LP failed — inconsistent profile?"
     win = int(np.argmin(totals))  # first min == reference's sequential <
 
@@ -783,63 +1002,154 @@ def _solve_multi(profile: MultiProfile, net: StarNetwork, B: int,
             log.append((_multi_schedule_from_lane(profile, ko, ks, kl, kms,
                                                   kml, b_int, k),
                         float(totals[k])))
-
     best_sched = _multi_schedule_from_lane(profile, ko, ks, kl, kms, kml,
                                            b_int, win)
-    best_score = float(totals[win])   # objective value (latency or period)
+    return _MultiRefine(st, win, best_sched, float(totals[win]), log,
+                        keep_log, refine_passes)
 
-    # ---- Stage B: per-device cut refinement (no-op at M == 1, where the
-    # stage-A sweep is already exhaustive). ------------------------------
-    rounds = 0
-    n_lp_refine = 0
-    if M >= 2 and refine_passes > 0:
-        cur_ms = np.array(best_sched.m_s, np.int64)
-        ml0 = int(best_sched.m_l)
-        ro = np.full(1, ko[win])
-        rs = ks[win][None, :]
-        rl = np.full(1, kl[win])
-        for _ in range(refine_passes):
-            cand = []
-            for i in range(M):
-                for c in range(ml0 + 1):
-                    if c != cur_ms[i]:
-                        row = cur_ms.copy()
-                        row[i] = c
-                        cand.append(row)
-            if not cand:
-                break
-            cms = np.stack(cand)
-            Kr = cms.shape[0]
-            ro_r, rl_r = np.repeat(ro, Kr), np.repeat(rl, Kr)
-            rs_r = np.repeat(rs, Kr, axis=0)
-            ml_r = np.full(Kr, ml0)
-            A_ub, b_ub, A_eq, b_eq = _build_multi_lp_stack(
-                profile, net, ro_r, rs_r, rl_r, cms, ml_r, B)
-            x, ok = _solve_multi_lps(cost, A_ub, b_ub, A_eq, b_eq, backend)
-            n_lp_refine += Kr
-            allowed = np.concatenate(
-                [np.ones((Kr, 1), bool), cms > 0,
-                 np.full((Kr, 1), ml0 > 0)], axis=1)
-            b_int = _round_batch_split_batch(x[:, :M + 2], B, allowed)
-            tot = score_batch(ro_r, rs_r, rl_r, cms, ml_r, b_int)
-            tot = np.where(ok, tot, np.inf)
-            k = int(np.argmin(tot))
-            rounds += 1
-            if not (tot[k] < best_score):     # strict improvement only
-                break
-            best_score = float(tot[k])
-            best_sched = _multi_schedule_from_lane(
-                profile, ro_r, rs_r, rl_r, cms, ml_r, b_int, k)
-            cur_ms = np.array(best_sched.m_s, np.int64)
-            if keep_log:
-                log.append((best_sched, best_score))
 
-    bd = _t_total_multi(profile, net, best_sched)
-    return MultiSchedulerResult(schedule=best_sched, breakdown=bd,
-                                t_total=bd.total, n_lp_solved=n_lp,
-                                search_log=log, n_candidates=K,
-                                n_pruned=n_pruned, refine_rounds=rounds,
-                                n_lp_refine=n_lp_refine,
-                                objective=objective,
-                                t_period=pipeline_mod.t_period_multi(
-                                    profile, net, best_sched))
+# ---------------------------------------------------------------------------
+# Cross-fleet batched solve (DESIGN.md §13).  Many fleets' stage-A stacks —
+# heterogeneous in (n_layers, M, topology) — are zero-padded to one common
+# tableau shape and solved as a single flattened (fleet, lane) simplex call;
+# stage-B refinement then runs in lockstep across the still-active fleets.
+# Lanes never mix arithmetically inside the stacked simplex and the padding
+# is provably inert (see batched_lp.pad_lp_stack), so every fleet's answer
+# is bit-identical to its own _solve_3w / _solve_multi call.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveRequest:
+    """One fleet's scheduling problem, as consumed by :func:`solve_many`.
+
+    ``profile`` dispatches the engine: a :class:`HierProfile` runs the
+    3-worker search (``origin="device"``), a :class:`MultiProfile` /
+    ``TreeProfile`` runs the multi-device search.
+    """
+    profile: Union[HierProfile, MultiProfile]
+    net: Union[Network, StarNetwork]
+    B: int
+    objective: str = "latency"
+
+
+@dataclasses.dataclass
+class SolveManyStats:
+    """Padding/batching telemetry accumulated by :func:`solve_many`."""
+    n_fleets: int = 0
+    lanes: int = 0            # stage-A lanes solved (post-prune), all fleets
+    lp_calls: int = 0         # stacked-simplex invocations (stage A + B)
+    refine_rounds: int = 0    # lockstep stage-B rounds
+    cells_native: int = 0     # tableau cells before padding
+    cells_padded: int = 0     # tableau cells actually solved
+
+    @property
+    def pad_waste(self) -> float:
+        """Fraction of solved tableau cells that were padding."""
+        if self.cells_padded == 0:
+            return 0.0
+        return 1.0 - self.cells_native / self.cells_padded
+
+
+def _stage_a_any(r: SolveRequest, prune: bool
+                 ) -> Union[_StageA3W, _StageAMulti]:
+    if r.objective not in OBJECTIVES:
+        raise ValueError(f"unknown scheduler objective: {r.objective!r}")
+    if isinstance(r.profile, MultiProfile):
+        return _stage_a_multi(r.profile, r.net, r.B, prune, r.objective,
+                              None)
+    return _stage_a_3w(r.profile, r.net, r.B, "device", WORKERS, prune,
+                       r.objective, None)
+
+
+def solve_many(requests: Sequence[SolveRequest], *,
+               backend: str = "batched", prune: bool = True,
+               refine_passes: int = 4, keep_log: bool = False,
+               stats: Optional[SolveManyStats] = None
+               ) -> List[Union[SchedulerResult, MultiSchedulerResult]]:
+    """Solve many fleets' Algorithm-1 searches in shared tableau stacks.
+
+    Results are returned in request order and are bit-identical to calling
+    the per-fleet engine on each request (asserted by the tier-1 planner
+    suite): stage A concatenates every fleet's candidate stack into one
+    :func:`batched_lp.linprog_batch_many` call, then stage-B coordinate
+    descent runs in lockstep — each round solves all still-active fleets'
+    single-cut-move stacks as one padded call.  Per-fleet state never
+    mixes: the stacked simplex pivots lanes independently and the padding
+    is inert (:func:`batched_lp.pad_lp_stack`).
+
+    ``backend="reference"`` loops per-fleet through the scalar engines
+    (the correctness oracle).  ``stats``, when given, is accumulated in
+    place with lane counts and padding-waste telemetry; callers that care
+    about padding (the planner admission loop) bucket requests by
+    ``(kind, n_layers, M)`` before calling, keeping ``pad_waste`` near 0.
+    """
+    reqs = list(requests)
+    if backend not in ("batched", "reference"):
+        raise ValueError(f"unknown scheduler backend: {backend!r}")
+    if backend == "reference":
+        out: List[Union[SchedulerResult, MultiSchedulerResult]] = []
+        for r in reqs:
+            if isinstance(r.profile, MultiProfile):
+                out.append(_solve_multi(r.profile, r.net, r.B, keep_log,
+                                        backend, prune, refine_passes,
+                                        r.objective))
+            else:
+                out.append(_solve_3w(r.profile, r.net, r.B,
+                                     keep_log=keep_log, backend=backend,
+                                     prune=prune, objective=r.objective))
+        return out
+
+    sts = [_stage_a_any(r, prune) for r in reqs]
+    stacks = [st.stack for st in sts]
+    if stats is not None:
+        stats.n_fleets += len(reqs)
+        stats.lanes += sum(st.stack[1].shape[0] for st in sts)
+        native, padded = batched_lp.pad_cells(stacks)
+        stats.cells_native += native
+        stats.cells_padded += padded
+        stats.lp_calls += 1
+    lps = batched_lp.linprog_batch_many(stacks)
+
+    results: List[Optional[Union[SchedulerResult, MultiSchedulerResult]]] \
+        = [None] * len(reqs)
+    searches: List[Tuple[int, _MultiRefine]] = []
+    for i, (st, lp) in enumerate(zip(sts, lps)):
+        if isinstance(st, _StageAMulti):
+            search = _finish_multi(st, lp.x, lp.success, keep_log,
+                                   refine_passes)
+            assert search is not None   # no warm starts in solve_many
+            searches.append((i, search))
+        else:
+            res3 = _finish_3w(st, lp.x, lp.success, keep_log)
+            assert res3 is not None     # no warm starts in solve_many
+            results[i] = res3
+
+    # Lockstep stage B: one padded call per round over every fleet that
+    # still has single-cut moves to score.  Fleets converge (and drop out)
+    # independently — exactly the per-fleet refinement loop, interleaved.
+    active = searches
+    while True:
+        round_stacks = []
+        holders = []
+        for i, s in active:
+            stack = s.next_stack()
+            if stack is not None:
+                round_stacks.append(stack)
+                holders.append((i, s))
+        if not round_stacks:
+            break
+        if stats is not None:
+            native, padded = batched_lp.pad_cells(round_stacks)
+            stats.cells_native += native
+            stats.cells_padded += padded
+            stats.lp_calls += 1
+            stats.refine_rounds += 1
+        for (i, s), lp in zip(holders,
+                              batched_lp.linprog_batch_many(round_stacks)):
+            s.step(lp.x, lp.success)
+        active = holders
+
+    for i, s in searches:
+        results[i] = s.result()
+    return results   # type: ignore[return-value]

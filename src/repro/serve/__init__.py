@@ -1,6 +1,6 @@
-from repro.serve.engine import (GenerationResult, generate,
-                                make_decode_step, make_prefill_step,
-                                sample_token)
+from repro.serve.engine import (GenerationResult, clear_decode_cache,
+                                generate, make_decode_step,
+                                make_prefill_step, sample_token)
 
-__all__ = ["GenerationResult", "generate", "make_decode_step",
-           "make_prefill_step", "sample_token"]
+__all__ = ["GenerationResult", "clear_decode_cache", "generate",
+           "make_decode_step", "make_prefill_step", "sample_token"]

@@ -21,10 +21,32 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["GenerationResult", "generate", "make_decode_step",
-           "make_prefill_step", "sample_token"]
+from repro.core.hybrid_step import _JitStepCache
+
+__all__ = ["GenerationResult", "clear_decode_cache", "generate",
+           "make_decode_step", "make_prefill_step", "sample_token"]
 
 Tree = Any
+
+# Compiled decode steps, one per model, in a bounded id-keyed LRU (the
+# entry pins the model, making the id key sound — see _JitStepCache).
+# The seed called jax.jit(make_decode_step(model)) inside generate(),
+# recompiling the decode step on every generate() invocation.
+_DECODE_CACHE = _JitStepCache()
+
+
+def _decode_step_for(model) -> Callable:
+    key = ("decode", id(model))
+    fn = _DECODE_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(make_decode_step(model))
+        _DECODE_CACHE.put(key, fn, model)
+    return fn
+
+
+def clear_decode_cache() -> None:
+    """Drop every cached compiled decode step (releases pinned models)."""
+    _DECODE_CACHE.clear()
 
 
 def make_prefill_step(model, max_len: int) -> Callable:
@@ -64,7 +86,7 @@ def generate(model, params: Tree, batch: Dict[str, jax.Array], *,
     if "embeds" in batch:
         prompt_len += batch["embeds"].shape[1]
     logits, cache = model.prefill(params, batch, max_len)
-    decode = jax.jit(make_decode_step(model))
+    decode = _decode_step_for(model)
 
     toks = []
     tok = sample_token(logits, key, temperature)

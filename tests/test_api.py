@@ -408,10 +408,15 @@ def test_benchmark_fleet_helpers_unchanged():
 # ---------------------------------------------------------------------------
 
 def test_public_surface_exports():
-    assert repro.__all__ == ["Fleet", "Plan", "plan", "as_layerstack"]
-    assert repro.core.__all__ == ["Fleet", "Plan", "plan", "as_layerstack"]
+    assert repro.__all__ == ["Fleet", "Plan", "plan", "plan_many",
+                             "as_layerstack"]
+    assert repro.core.__all__ == ["Fleet", "Plan", "plan", "plan_many",
+                                  "as_layerstack"]
     assert repro.Fleet is Fleet and repro.core.Fleet is Fleet
     assert repro.plan is plan and repro.core.plan is plan
+    from repro.api import plan_many
+    assert repro.plan_many is plan_many
+    assert repro.core.plan_many is plan_many
     assert repro.Plan is Plan
     from repro.core.layerstack import as_layerstack
     assert repro.as_layerstack is as_layerstack

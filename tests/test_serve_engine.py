@@ -1,0 +1,81 @@
+"""Serving-engine regression suite: ``generate`` must reuse one compiled
+decode step per model (the seed re-jitted it on every call), and the
+decode-step cache must stay bounded and clearable."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.serve import engine
+from repro.core.hybrid_step import JIT_CACHE_SIZE
+
+
+class _ToyModel:
+    """Minimal prefill/decode pair exercising the generate driver without
+    a real LM (decode adds the token id to a running cache sum)."""
+
+    def __init__(self, vocab: int = 17):
+        self.vocab = vocab
+
+    def prefill(self, params, batch, max_len):
+        toks = batch["tokens"]
+        cache = jnp.sum(toks, axis=1, keepdims=True).astype(jnp.float32)
+        logits = jnp.tile(cache, (1, self.vocab))
+        return logits, cache
+
+    def decode_step(self, params, tok, cache, pos):
+        cache = cache + tok.astype(jnp.float32)
+        return jnp.tile(cache, (1, self.vocab)), cache
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    engine.clear_decode_cache()
+    yield
+    engine.clear_decode_cache()
+
+
+def _gen(model, n_new=3):
+    batch = {"tokens": jnp.arange(6, dtype=jnp.int32).reshape(2, 3)}
+    return engine.generate(model, {}, batch, max_len=8, n_new=n_new)
+
+
+def test_generate_runs_toy_model():
+    out = _gen(_ToyModel())
+    assert out.tokens.shape == (2, 3)
+    assert out.prefill_logits.shape == (2, 17)
+
+
+def test_generate_does_not_recompile_per_call(monkeypatch):
+    builds = []
+    real = engine.make_decode_step
+
+    def counting(model):
+        builds.append(model)
+        return real(model)
+
+    monkeypatch.setattr(engine, "make_decode_step", counting)
+    model = _ToyModel()
+    first = _gen(model)
+    assert len(builds) == 1
+    second = _gen(model, n_new=5)      # same model: cached step reused
+    assert len(builds) == 1
+    assert second.tokens.shape == (2, 5)
+    other = _ToyModel()
+    _gen(other)                        # new model: one new compile
+    assert builds == [model, other]
+    engine.clear_decode_cache()
+    _gen(model)                        # cleared: recompiles once
+    assert builds == [model, other, model]
+    assert first.tokens.shape == (2, 3)
+
+
+def test_decode_cache_identity_and_boundedness():
+    model = _ToyModel()
+    fn = engine._decode_step_for(model)
+    assert engine._decode_step_for(model) is fn
+    keep = [_ToyModel() for _ in range(JIT_CACHE_SIZE + 8)]
+    for m in keep:
+        engine._decode_step_for(m)
+    assert len(engine._DECODE_CACHE) <= JIT_CACHE_SIZE
+    # the original model's entry was evicted by the flood -> fresh build
+    assert engine._decode_step_for(model) is not fn
