@@ -125,8 +125,19 @@ def _module(name: str):
     return importlib.import_module(f"benchmarks.{name}")
 
 
+def validate_section(only: str) -> str:
+    """The section name, or ValueError naming the valid choices —
+    shared by every ``only=`` entry point so a typo'd programmatic call
+    fails the same helpful way the CLI does (not a bare KeyError)."""
+    if only not in _SECTIONS:
+        raise ValueError(
+            f"unknown section {only!r}; valid sections: "
+            f"{', '.join(sorted(_SECTIONS))}")
+    return only
+
+
 def run_sections(only: str = None) -> int:
-    keys = [only] if only else list(_SECTIONS)
+    keys = [validate_section(only)] if only else list(_SECTIONS)
     failures = 0
     for key in keys:
         title, mod_name, _, _ = _SECTIONS[key]
@@ -160,7 +171,7 @@ def _json_value(key: str, include_reference: bool):
 
 
 def _json_keys(only: str = None) -> list:
-    keys = [only] if only else list(_SECTIONS)
+    keys = [validate_section(only)] if only else list(_SECTIONS)
     return [k for k in keys if _SECTIONS[k][2] is not None]
 
 
@@ -328,12 +339,18 @@ def main() -> None:
                         metavar="PATH",
                         help="recompute the deterministic schedule fields "
                              "and exit non-zero if they drift from PATH")
-    parser.add_argument("--section", default=None, choices=list(_SECTIONS),
+    parser.add_argument("--section", default=None, metavar="NAME",
                         help="restrict to one section: report mode runs "
                              "just it; --json merges only its subtree "
                              "into the existing artifact; "
-                             "--check-schedules drift-checks only it")
+                             "--check-schedules drift-checks only it "
+                             f"(sections: {', '.join(sorted(_SECTIONS))})")
     args = parser.parse_args()
+    if args.section is not None:
+        try:
+            validate_section(args.section)
+        except ValueError as e:
+            parser.error(str(e))
     if args.check_schedules is not None:
         sys.exit(check_schedules(args.check_schedules, only=args.section))
     if args.json is not None:

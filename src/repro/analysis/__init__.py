@@ -1,0 +1,20 @@
+"""repro.analysis — repo-native static analysis (DESIGN.md §14).
+
+Five AST checkers, each pinned to a bug class this codebase has
+actually shipped and fixed, plus a baseline/ratchet runner wired into
+CI as a tier-1 gate.  Run ``python -m repro.analysis.lint`` from the
+repo root; ``--list-checks`` prints the finding-code catalog.
+"""
+from repro.analysis.base import CODES, Finding, SourceFile
+
+__all__ = ["CODES", "Finding", "SourceFile", "lint_file", "lint_paths",
+           "run"]
+
+
+def __getattr__(name):
+    # Lazy: importing the runner here would shadow the
+    # ``python -m repro.analysis.lint`` entry point (runpy warning).
+    if name in ("lint_file", "lint_paths", "run"):
+        from repro.analysis import lint
+        return getattr(lint, name)
+    raise AttributeError(name)

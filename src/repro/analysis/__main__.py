@@ -1,0 +1,6 @@
+"""``python -m repro.analysis`` == ``python -m repro.analysis.lint``."""
+import sys
+
+from repro.analysis.lint import main
+
+sys.exit(main())

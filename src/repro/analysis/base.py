@@ -1,0 +1,276 @@
+"""Shared infrastructure for the repo-native static-analysis pass.
+
+The analysis package (DESIGN.md §14) is a small AST toolkit with five
+repo-specific checkers, each targeting a bug class that has actually
+shipped (and been fixed) in this codebase: per-call re-jit, unbounded
+``id()``-keyed caches, donated-buffer reuse, bytes-vs-elems unit mixes
+in the wire cost model, deprecated-shim calls, and Pallas grid/BlockSpec
+mismatches.  This module holds what every checker shares:
+
+* :class:`Finding` — one diagnostic, with a *stable* identity key
+  ``(code, path, message)`` (no line numbers, so the committed baseline
+  survives unrelated edits).
+* :class:`SourceFile` — parsed source plus the inline
+  ``# repro-lint: disable=CODE <reason>`` escape-hatch map (built from
+  real COMMENT tokens, so string literals can never fake a disable).
+* :class:`Imports` — per-file import resolution so checkers can decide
+  whether ``jit(...)`` means ``jax.jit`` and which module an attribute
+  call lands in.
+* ``const_int`` / ``dotted_name`` — tiny resolution helpers.
+
+Checkers are plain objects with ``code_prefix``, ``name`` and
+``check(SourceFile) -> list[Finding]``; path scoping lives in the runner
+(:mod:`repro.analysis.lint`), keeping checkers directly callable on
+fixture snippets in tests.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import re
+import tokenize
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+# Catalog of finding codes (DESIGN.md §14).  One-line summaries; the
+# finding message carries the site-specific detail.
+CODES: Dict[str, str] = {
+    "RA000": "file does not parse (checkers skipped)",
+    "RA001": "repro-lint disable comment without a reason or with an "
+             "unknown code",
+    "RA101": "jax.jit called inside a loop body (re-traces per "
+             "iteration)",
+    "RA102": "jax.jit(...) immediately called (re-traces on every "
+             "invocation of the enclosing function)",
+    "RA103": "unbounded plain-dict cache keyed by id(...)",
+    "RA104": "Python-side nondeterminism (time.*, random.*, set "
+             "iteration) reachable from a jitted function",
+    "RA105": "unhashable literal passed in a static argument position",
+    "RA201": "array read after being passed in a donated argument "
+             "position",
+    "RA301": "arithmetic mixes unit families (bytes/elems/mb/mbps) "
+             "without an explicit conversion",
+    "RA302": "value of one unit family bound to a name of another "
+             "(assignment, keyword, parameter, or return)",
+    "RA401": "call or import of a deprecated pre-Fleet/Plan shim from "
+             "in-repo code (static deprecation firewall)",
+    "RA501": "pallas_call grid arity does not match a BlockSpec "
+             "index_map signature",
+    "RA502": "BlockSpec block shape inconsistent with index_map return "
+             "arity or not dividing the declared array dim",
+    "RA503": "matmul in a Pallas kernel may accumulate in low "
+             "precision (no f32 cast / preferred_element_type)",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    code: str
+    path: str          # repo-relative posix path
+    line: int
+    col: int
+    message: str       # stable: must not embed line/col numbers
+
+    @property
+    def key(self) -> Tuple[str, str, str]:
+        """Baseline identity: survives line-number churn."""
+        return (self.code, self.path, self.message)
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} " \
+               f"{self.message}"
+
+    def to_json(self) -> Dict:
+        return {"code": self.code, "path": self.path, "line": self.line,
+                "col": self.col, "message": self.message}
+
+
+# ``# repro-lint: disable=RA101,RA102 <reason>`` on the flagged line, or
+# ``disable-next=...`` on the line above it.
+_DISABLE_RE = re.compile(
+    r"repro-lint:\s*(disable|disable-next)=([A-Za-z0-9,]+)\s*(.*)$")
+
+
+class SourceFile:
+    """One parsed source file plus its disable-comment map."""
+
+    def __init__(self, path: str, text: str):
+        self.path = path
+        self.text = text
+        self.parse_error: Optional[str] = None
+        try:
+            self.tree: ast.AST = ast.parse(text)
+        except SyntaxError as e:  # surfaced as RA000 by the runner
+            self.parse_error = str(e)
+            self.tree = ast.Module(body=[], type_ignores=[])
+        # line -> set of codes disabled on that line
+        self.disables: Dict[int, Set[str]] = {}
+        # meta-findings about the disable comments themselves (RA001)
+        self.disable_findings: List[Finding] = []
+        self._scan_comments()
+
+    def _scan_comments(self) -> None:
+        try:
+            tokens = tokenize.generate_tokens(
+                io.StringIO(self.text).readline)
+            comments = [(t.start[0], t.string) for t in tokens
+                        if t.type == tokenize.COMMENT]
+        except (tokenize.TokenError, IndentationError, SyntaxError):
+            comments = []
+        for line, comment in comments:
+            m = _DISABLE_RE.search(comment)
+            if not m:
+                continue
+            kind, codes_s, reason = m.groups()
+            codes = {c.strip() for c in codes_s.split(",") if c.strip()}
+            target = line + 1 if kind == "disable-next" else line
+            unknown = sorted(c for c in codes if c not in CODES)
+            if unknown:
+                self.disable_findings.append(Finding(
+                    "RA001", self.path, line, 0,
+                    f"disable comment names unknown code(s) "
+                    f"{', '.join(unknown)}"))
+            if not reason.strip(" -:;"):
+                self.disable_findings.append(Finding(
+                    "RA001", self.path, line, 0,
+                    f"disable={','.join(sorted(codes))} has no reason — "
+                    f"every suppression must say why"))
+            self.disables.setdefault(target, set()).update(codes)
+
+    def disabled(self, finding: Finding) -> bool:
+        return finding.code in self.disables.get(finding.line, set())
+
+
+class Imports:
+    """Per-file import map: resolve local names to dotted module paths.
+
+    ``modules`` maps a bound name to the module it denotes
+    (``import a.b as c`` -> ``c: a.b``; ``import a.b`` -> ``a: a`` with
+    the full path reachable through attribute chains).  ``names`` maps a
+    bound name from ``from M import n [as k]`` to ``(M, n)``.
+    """
+
+    def __init__(self, tree: ast.AST):
+        self.modules: Dict[str, str] = {}
+        self.names: Dict[str, Tuple[str, str]] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.asname:
+                        self.modules[alias.asname] = alias.name
+                    else:
+                        root = alias.name.split(".")[0]
+                        self.modules[root] = root
+            elif isinstance(node, ast.ImportFrom) and node.module \
+                    and node.level == 0:
+                for alias in node.names:
+                    bound = alias.asname or alias.name
+                    self.names[bound] = (node.module, alias.name)
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Fully-qualified dotted path of a Name/Attribute chain, or
+        ``None`` when the root is not an import binding."""
+        parts = dotted_name(node)
+        if not parts:
+            return None
+        root, rest = parts[0], parts[1:]
+        if root in self.names:
+            mod, orig = self.names[root]
+            return ".".join([mod, orig] + rest)
+        if root in self.modules:
+            return ".".join([self.modules[root]] + rest)
+        return None
+
+
+def dotted_name(node: ast.AST) -> Optional[List[str]]:
+    """``a.b.c`` attribute chain as ``["a", "b", "c"]`` (Name roots
+    only)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return list(reversed(parts))
+    return None
+
+
+def call_path(imports: Imports, call: ast.Call) -> Optional[str]:
+    """Resolved dotted path of a call's callee (``jax.jit``,
+    ``repro.core.scheduler.solve``, ...), or the raw dotted text when
+    the root is a local binding rather than an import."""
+    resolved = imports.resolve(call.func)
+    if resolved:
+        return resolved
+    parts = dotted_name(call.func)
+    return ".".join(parts) if parts else None
+
+
+def const_int(node: ast.AST, env: Dict[str, int]) -> Optional[int]:
+    """Resolve a node to a compile-time int: literals, names bound in
+    ``env``, and unary minus."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return node.value
+    if isinstance(node, ast.Name):
+        return env.get(node.id)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        v = const_int(node.operand, env)
+        return -v if v is not None else None
+    return None
+
+
+def int_env(body: Iterable[ast.stmt]) -> Dict[str, int]:
+    """Names bound exactly once to int literals in a statement list —
+    the module/function-level tile constants (``LANES = 128``)."""
+    env: Dict[str, int] = {}
+    seen: Set[str] = set()
+    for stmt in body:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name):
+            name = stmt.targets[0].id
+            v = const_int(stmt.value, {})
+            if name in seen:
+                env.pop(name, None)      # rebound: not a constant
+            elif v is not None:
+                env[name] = v
+            seen.add(name)
+    return env
+
+
+def walk_functions(tree: ast.AST):
+    """Every FunctionDef/AsyncFunctionDef in the file, including nested
+    ones."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def enclosing_loops(tree: ast.AST) -> Dict[int, bool]:
+    """Map ``id(node) -> True`` for nodes lexically inside a for/while
+    body (used by the re-jit checker).  Loop iter/condition expressions
+    do not count as "inside"."""
+    inside: Dict[int, bool] = {}
+
+    def mark(node: ast.AST, flag: bool) -> None:
+        inside[id(node)] = flag
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            for child in [node.target, node.iter]:
+                mark(child, flag)
+            for child in node.body + node.orelse:
+                mark(child, True)
+            return
+        if isinstance(node, ast.While):
+            mark(node.test, flag)
+            for child in node.body + node.orelse:
+                mark(child, True)
+            return
+        # A nested function body is a fresh call frame: being *defined*
+        # inside a loop does not mean each call re-enters the loop.
+        flag = flag and not isinstance(
+            node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda))
+        for child in ast.iter_child_nodes(node):
+            mark(child, flag)
+
+    mark(tree, False)
+    return inside

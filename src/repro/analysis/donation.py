@@ -1,0 +1,197 @@
+"""Donation-safety checker (RA201, DESIGN.md §14).
+
+``jax.jit(f, donate_argnums=0)`` lets XLA reuse the input buffer for
+the output — which is exactly what the cached hybrid steps do with
+``params`` (PR 1) — but makes any later read of the donated array
+undefined behaviour: jax raises on CPU, and on accelerators the buffer
+may silently alias the new values.  PR 5's quickstart fix
+(``ref_params = jax.tree.map(jnp.array, params)`` *before* the donating
+step) is the canonical repair.
+
+The checker does a statement-order dataflow walk per function body:
+
+* A name passed in a donated position of a call to a known-donating
+  callable becomes *tainted* at that call.
+* A later ``Load`` of the tainted name is RA201.
+* Rebinding the name (assignment target, including the common
+  ``params, loss = step(params, ...)`` self-rebind) clears the taint —
+  the read inside the donating call itself is the donation, not a
+  violation.
+
+Donating callables are resolved intra-module: ``jax.jit(f,
+donate_argnums=...)`` / ``donate_argnames=...`` bound to a name or
+used as a decorator.  Cross-module donation (e.g. a ``Plan.step_fn``
+consumer) is out of static reach — the runtime error path covers it.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Sequence, Set, Tuple
+
+from repro.analysis.base import (Finding, Imports, SourceFile,
+                                 dotted_name, walk_functions)
+from repro.analysis.jit_hygiene import (_is_jit_call, _jit_kwarg)
+
+
+def _donating_node(imports: Imports, node: ast.AST) -> "ast.Call | None":
+    """The Call whose keywords carry donate_arg* for a jit expression:
+    ``jax.jit(...)`` itself, or ``functools.partial(jax.jit, ...)``
+    (the canonical decorator spelling)."""
+    if _is_jit_call(imports, node):
+        return node
+    if isinstance(node, ast.Call):
+        parts = dotted_name(node.func)
+        if parts and parts[-1] == "partial" and node.args:
+            inner = dotted_name(node.args[0])
+            if inner and inner[-1] in ("jit", "pjit"):
+                return node
+    return None
+
+
+def _donated_positions(call: ast.Call) -> Tuple[Set[int], Set[str]]:
+    nums: Set[int] = set()
+    names: Set[str] = set()
+    v = _jit_kwarg(call, "donate_argnums")
+    if isinstance(v, ast.Constant) and isinstance(v.value, int):
+        nums.add(v.value)
+    elif isinstance(v, (ast.Tuple, ast.List)):
+        for e in v.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                nums.add(e.value)
+    v = _jit_kwarg(call, "donate_argnames")
+    if isinstance(v, ast.Constant) and isinstance(v.value, str):
+        names.add(v.value)
+    elif isinstance(v, (ast.Tuple, ast.List)):
+        for e in v.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                names.add(e.value)
+    return nums, names
+
+
+class DonationChecker:
+    code_prefix = "RA2"
+    name = "donation"
+
+    def check(self, src: SourceFile) -> List[Finding]:
+        imports = Imports(src.tree)
+        # name -> (donated positions, donated kwarg names)
+        donators: Dict[str, Tuple[Set[int], Set[str]]] = {}
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and _is_jit_call(imports, node.value):
+                nums, names = _donated_positions(node.value)
+                if nums or names:
+                    donators[node.targets[0].id] = (nums, names)
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    host = _donating_node(imports, dec)
+                    if host is not None:
+                        nums, names = _donated_positions(host)
+                        if nums or names:
+                            donators[node.name] = (nums, names)
+
+        out: List[Finding] = []
+        for fn in walk_functions(src.tree):
+            out += self._walk_body(src, fn.body, donators, imports)
+        out += self._walk_body(
+            src,
+            [s for s in getattr(src.tree, "body", [])
+             if not isinstance(s, (ast.FunctionDef,
+                                   ast.AsyncFunctionDef, ast.ClassDef))],
+            donators, imports)
+        return out
+
+    def _walk_body(self, src: SourceFile, body: Sequence[ast.stmt],
+                   donators, imports: Imports) -> List[Finding]:
+        out: List[Finding] = []
+        tainted: Dict[str, int] = {}     # name -> donation line
+
+        def expr_reads(node: ast.AST) -> None:
+            for n in ast.walk(node):
+                if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load) \
+                        and n.id in tainted:
+                    out.append(Finding(
+                        "RA201", src.path, n.lineno, n.col_offset,
+                        f"{n.id!r} is read after being donated to a "
+                        f"jitted call (donate_argnums) — the buffer may "
+                        f"already be reused; copy it first "
+                        f"(jax.tree.map(jnp.array, ...)) or rebind the "
+                        f"result"))
+
+        def handle_call(call: ast.Call) -> None:
+            if not (isinstance(call.func, ast.Name)
+                    and call.func.id in donators):
+                # also catch the immediate form jax.jit(f, donate...)(x)
+                if isinstance(call.func, ast.Call) \
+                        and _is_jit_call(imports, call.func):
+                    nums, names = _donated_positions(call.func)
+                else:
+                    return
+            else:
+                nums, names = donators[call.func.id]
+            for i, arg in enumerate(call.args):
+                if i in nums and isinstance(arg, ast.Name):
+                    tainted[arg.id] = call.lineno
+            for kw in call.keywords:
+                if kw.arg in names and isinstance(kw.value, ast.Name):
+                    tainted[kw.value.id] = call.lineno
+
+        def clear_targets(target: ast.AST) -> None:
+            for n in ast.walk(target):
+                if isinstance(n, ast.Name):
+                    tainted.pop(n.id, None)
+
+        def walk_stmt(stmt: ast.stmt) -> None:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                return               # separate frame, walked on its own
+            if isinstance(stmt, ast.Assign):
+                expr_reads(stmt.value)
+                for n in ast.walk(stmt.value):
+                    if isinstance(n, ast.Call):
+                        handle_call(n)
+                for t in stmt.targets:
+                    clear_targets(t)
+                return
+            if isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+                if stmt.value is not None:
+                    expr_reads(stmt.value)
+                    for n in ast.walk(stmt.value):
+                        if isinstance(n, ast.Call):
+                            handle_call(n)
+                clear_targets(stmt.target)
+                return
+            if isinstance(stmt, (ast.For, ast.AsyncFor)):
+                expr_reads(stmt.iter)
+                clear_targets(stmt.target)
+                for s in stmt.body + stmt.orelse:
+                    walk_stmt(s)
+                return
+            if isinstance(stmt, (ast.If, ast.While)):
+                expr_reads(stmt.test)
+                for s in stmt.body + stmt.orelse:
+                    walk_stmt(s)
+                return
+            if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                for item in stmt.items:
+                    expr_reads(item.context_expr)
+                for s in stmt.body:
+                    walk_stmt(s)
+                return
+            if isinstance(stmt, ast.Try):
+                for s in stmt.body + stmt.orelse + stmt.finalbody:
+                    walk_stmt(s)
+                for h in stmt.handlers:
+                    for s in h.body:
+                        walk_stmt(s)
+                return
+            # expression statements, return, etc.: reads then calls
+            expr_reads(stmt)
+            for n in ast.walk(stmt):
+                if isinstance(n, ast.Call):
+                    handle_call(n)
+
+        for stmt in body:
+            walk_stmt(stmt)
+        return out

@@ -1,0 +1,295 @@
+"""jit-hygiene checker (RA101–RA105, DESIGN.md §14).
+
+Every sub-check maps to a bug this repo has shipped and later fixed:
+
+* **RA101 / RA102 — per-call re-jit.**  ``jax.jit`` inside a loop body
+  (RA101) or a ``jax.jit(...)``\\ (...) immediate call inside a function
+  body (RA102) builds a *new* traced executable on every pass — the
+  exact shape of the seed's ``jax.jit(make_decode_step(model))`` inside
+  ``generate()`` (fixed in PR 9 with a bounded per-model cache) and the
+  per-step re-jit the PR 1 cached hybrid steps removed (~17x/step).
+
+* **RA103 — unbounded id()-keyed caches.**  A plain dict keyed by
+  ``id(obj)`` grows forever *and* is unsound once the object is
+  collected and its id recycled (PR 4 replaced the grow-forever
+  ``_JIT_CACHE`` dict with the pinning ``_JitStepCache`` LRU).  The
+  checker flags subscript stores whose key expression contains an
+  ``id(...)`` call when the target resolves to a bare ``{}``/``dict()``
+  binding; bounded cache objects (anything with an eviction method) do
+  not match because their stores go through method calls.
+
+* **RA104 — nondeterminism reachable from jitted code.**  ``time.*``
+  and ``random.*`` calls and iteration over set displays execute at
+  *trace* time inside a jitted function: the compiled executable bakes
+  in whatever value the tracer saw, silently breaking the repo's
+  bitwise invariants (warm==cold, kill/resume equality).  Reachability
+  is the intra-module call graph seeded from functions that are jitted
+  (decorator or ``jax.jit(f)`` by name).
+
+* **RA105 — unhashable static args.**  A list/dict/set literal passed
+  in a ``static_argnums``/``static_argnames`` position raises at call
+  time (or, worse, at first call on a rarely-taken path).  Checked at
+  call sites of jit results built in the same module.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.base import (Finding, Imports, SourceFile, call_path,
+                                 dotted_name, enclosing_loops,
+                                 walk_functions)
+
+_JIT_PATHS = {"jax.jit", "jax.pjit", "jax.experimental.pjit.pjit"}
+
+# stdlib modules whose calls are Python-side nondeterminism when they
+# execute at trace time.
+_NONDET_MODULES = {"time", "random", "datetime"}
+
+_UNHASHABLE = (ast.List, ast.Dict, ast.Set, ast.DictComp, ast.ListComp,
+               ast.SetComp)
+
+
+def _is_jit_call(imports: Imports, node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    path = call_path(imports, node)
+    if path in _JIT_PATHS:
+        return True
+    # ``from jax import jit`` / bare ``jit`` bound by the file itself
+    parts = dotted_name(node.func)
+    return bool(parts) and parts[-1] == "jit" and (
+        path is None or path.endswith(".jit"))
+
+
+def _jit_kwarg(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _static_positions(call: ast.Call) -> Tuple[Set[int], Set[str]]:
+    nums: Set[int] = set()
+    names: Set[str] = set()
+    v = _jit_kwarg(call, "static_argnums")
+    if isinstance(v, ast.Constant) and isinstance(v.value, int):
+        nums.add(v.value)
+    elif isinstance(v, (ast.Tuple, ast.List)):
+        for e in v.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                nums.add(e.value)
+    v = _jit_kwarg(call, "static_argnames")
+    if isinstance(v, ast.Constant) and isinstance(v.value, str):
+        names.add(v.value)
+    elif isinstance(v, (ast.Tuple, ast.List)):
+        for e in v.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                names.add(e.value)
+    return nums, names
+
+
+class JitHygieneChecker:
+    code_prefix = "RA1"
+    name = "jit-hygiene"
+
+    def check(self, src: SourceFile) -> List[Finding]:
+        imports = Imports(src.tree)
+        out: List[Finding] = []
+        out += self._re_jit(src, imports)
+        out += self._id_caches(src, imports)
+        out += self._nondeterminism(src, imports)
+        out += self._static_args(src, imports)
+        return out
+
+    # -- RA101 / RA102 ---------------------------------------------------
+    def _re_jit(self, src: SourceFile, imports: Imports) -> List[Finding]:
+        out = []
+        in_loop = enclosing_loops(src.tree)
+        in_function: Set[int] = set()
+        for fn in walk_functions(src.tree):
+            for node in ast.walk(fn):
+                in_function.add(id(node))
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if _is_jit_call(imports, node):
+                if in_loop.get(id(node)):
+                    out.append(Finding(
+                        "RA101", src.path, node.lineno, node.col_offset,
+                        "jax.jit called inside a loop body — each "
+                        "iteration re-traces and re-compiles; hoist the "
+                        "jit out of the loop or cache the compiled "
+                        "function"))
+            elif isinstance(node.func, ast.Call) \
+                    and _is_jit_call(imports, node.func) \
+                    and id(node) in in_function:
+                # jax.jit(f)(args): the executable is rebuilt on every
+                # call of the enclosing function.
+                out.append(Finding(
+                    "RA102", src.path, node.lineno, node.col_offset,
+                    "jax.jit(...) immediately called — the compiled "
+                    "function is rebuilt on every invocation; bind the "
+                    "jitted function once (module level or a bounded "
+                    "cache) and reuse it"))
+        return out
+
+    # -- RA103 -----------------------------------------------------------
+    def _id_caches(self, src: SourceFile, imports: Imports
+                   ) -> List[Finding]:
+        # Names bound to a bare dict at module or class level.
+        plain_dicts: Set[str] = set()
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                v = node.value
+                is_dict = isinstance(v, ast.Dict) or (
+                    isinstance(v, ast.Call)
+                    and isinstance(v.func, ast.Name)
+                    and v.func.id == "dict" and not v.args)
+                if is_dict:
+                    plain_dicts.add(node.targets[0].id)
+
+        def key_uses_id(expr: ast.AST) -> bool:
+            return any(isinstance(n, ast.Call)
+                       and isinstance(n.func, ast.Name)
+                       and n.func.id == "id" for n in ast.walk(expr))
+
+        out = []
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, ast.AugAssign):
+                targets = [node.target]
+            else:
+                continue
+            for t in targets:
+                if isinstance(t, ast.Subscript) \
+                        and isinstance(t.value, ast.Name) \
+                        and t.value.id in plain_dicts \
+                        and key_uses_id(t.slice):
+                    out.append(Finding(
+                        "RA103", src.path, t.lineno, t.col_offset,
+                        f"store into plain dict {t.value.id!r} keyed by "
+                        f"id(...) — the dict grows without bound and a "
+                        f"recycled id aliases a dead entry; use a "
+                        f"bounded LRU that pins the keyed object "
+                        f"(see hybrid_step._JitStepCache)"))
+        return out
+
+    # -- RA104 -----------------------------------------------------------
+    def _nondeterminism(self, src: SourceFile, imports: Imports
+                        ) -> List[Finding]:
+        # Functions (by name) defined anywhere in the file.
+        fns: Dict[str, ast.FunctionDef] = {}
+        for fn in walk_functions(src.tree):
+            fns.setdefault(fn.name, fn)
+
+        def is_jitted(fn: ast.FunctionDef) -> bool:
+            for dec in fn.decorator_list:
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                parts = dotted_name(target) or []
+                if parts and parts[-1] in ("jit", "pjit"):
+                    return True
+            return False
+
+        jitted: Set[str] = {n for n, f in fns.items() if is_jitted(f)}
+        # ...plus functions passed by name to jax.jit(...) in this file.
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Call) and _is_jit_call(imports, node) \
+                    and node.args and isinstance(node.args[0], ast.Name):
+                jitted.add(node.args[0].id)
+
+        # Intra-module call graph, propagated to a fixed point.
+        calls: Dict[str, Set[str]] = {}
+        for name, fn in fns.items():
+            callees = set()
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Name) \
+                        and node.func.id in fns:
+                    callees.add(node.func.id)
+            calls[name] = callees
+        reach = set(jitted)
+        frontier = list(jitted & set(fns))
+        while frontier:
+            name = frontier.pop()
+            for callee in calls.get(name, ()):
+                if callee not in reach:
+                    reach.add(callee)
+                    frontier.append(callee)
+
+        out = []
+        for name in sorted(reach & set(fns)):
+            fn = fns[name]
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call):
+                    parts = dotted_name(node.func)
+                    if parts and len(parts) >= 2 \
+                            and parts[0] in _NONDET_MODULES \
+                            and imports.resolve(node.func):
+                        out.append(Finding(
+                            "RA104", src.path, node.lineno,
+                            node.col_offset,
+                            f"{'.'.join(parts)}() inside jit-reachable "
+                            f"function {name!r} runs at trace time — "
+                            f"the compiled step bakes in one stale "
+                            f"value and breaks bitwise replay"))
+                if isinstance(node, (ast.For, ast.AsyncFor)):
+                    it = node.iter
+                    is_set = isinstance(it, (ast.Set, ast.SetComp)) or (
+                        isinstance(it, ast.Call)
+                        and isinstance(it.func, ast.Name)
+                        and it.func.id in ("set", "frozenset"))
+                    if is_set:
+                        out.append(Finding(
+                            "RA104", src.path, node.lineno,
+                            node.col_offset,
+                            f"iteration over an unordered set inside "
+                            f"jit-reachable function {name!r} — trace "
+                            f"order (and therefore the compiled "
+                            f"program) varies across runs; sort first"))
+        return out
+
+    # -- RA105 -----------------------------------------------------------
+    def _static_args(self, src: SourceFile, imports: Imports
+                     ) -> List[Finding]:
+        # jitted-name -> (static positions, static names)
+        jitted: Dict[str, Tuple[Set[int], Set[str]]] = {}
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and _is_jit_call(imports, node.value):
+                nums, names = _static_positions(node.value)
+                if nums or names:
+                    jitted[node.targets[0].id] = (nums, names)
+
+        out = []
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            # immediate form: jax.jit(f, static_argnums=...)(args)
+            if isinstance(node.func, ast.Call) \
+                    and _is_jit_call(imports, node.func):
+                nums, names = _static_positions(node.func)
+            elif isinstance(node.func, ast.Name) \
+                    and node.func.id in jitted:
+                nums, names = jitted[node.func.id]
+            else:
+                continue
+            for i, arg in enumerate(node.args):
+                if i in nums and isinstance(arg, _UNHASHABLE):
+                    out.append(Finding(
+                        "RA105", src.path, arg.lineno, arg.col_offset,
+                        f"unhashable literal in static position {i} — "
+                        f"jit static args must be hashable; pass a "
+                        f"tuple"))
+            for kw in node.keywords:
+                if kw.arg in names and isinstance(kw.value, _UNHASHABLE):
+                    out.append(Finding(
+                        "RA105", src.path, kw.value.lineno,
+                        kw.value.col_offset,
+                        f"unhashable literal for static argument "
+                        f"{kw.arg!r} — jit static args must be "
+                        f"hashable; pass a tuple"))
+        return out

@@ -1,0 +1,274 @@
+"""Pallas kernel checks (RA501–RA503, DESIGN.md §14).
+
+The three kernels under ``kernels/`` are proven against ``kernels/
+ref.py`` by the PR 7 exactness-oracle suite — at *runtime*, on the
+shapes the suite draws.  These checks pin the structural contracts
+statically, so a grid/BlockSpec drift is caught before any oracle run:
+
+* **RA501** — every ``BlockSpec`` ``index_map`` of a ``pallas_call``
+  must take exactly ``len(grid)`` parameters.  A missing grid axis
+  silently broadcasts the block over the dropped axis.
+* **RA502** — the ``index_map`` must return one coordinate per block
+  dimension, and where both a block dim and the matching
+  ``out_shape`` dim resolve to compile-time ints (literals or tile
+  constants like ``LANES = 128``), the block dim must divide the
+  array dim — the static half of the ``T % bq == 0`` runtime asserts.
+* **RA503** — matmuls inside kernel bodies must accumulate in f32:
+  every ``dot``/``dot_general``/``einsum``/``@`` either passes
+  ``preferred_element_type`` or takes operands visibly cast via
+  ``.astype(jnp.float32)``.  Reading a ``*_ref`` input raw into a
+  matmul is flagged — on bf16 inputs the MXU would accumulate in bf16
+  and the PR 7 ULP budgets no longer hold.  Kernel bodies are
+  functions named ``*_kernel`` or passed (possibly via
+  ``functools.partial``) as the first argument of a ``pallas_call``.
+
+Resolution is best-effort and conservative: dims or maps the checker
+cannot resolve statically are skipped, never guessed.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.base import (Finding, SourceFile, const_int,
+                                 dotted_name, int_env, walk_functions)
+
+_DOT_CALLS = {"dot", "dot_general", "einsum", "matmul"}
+
+
+def _callee(node: ast.Call) -> Optional[str]:
+    parts = dotted_name(node.func)
+    return parts[-1] if parts else None
+
+
+def _is_pallas_call(node: ast.Call) -> bool:
+    parts = dotted_name(node.func)
+    return bool(parts) and parts[-1] == "pallas_call"
+
+
+def _is_blockspec(node: ast.AST) -> bool:
+    return isinstance(node, ast.Call) and _callee(node) == "BlockSpec"
+
+
+def _kwarg(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _specs(node: Optional[ast.expr]) -> List[ast.Call]:
+    """BlockSpec calls inside an in_specs/out_specs expression."""
+    if node is None:
+        return []
+    if _is_blockspec(node):
+        return [node]
+    if isinstance(node, (ast.List, ast.Tuple)):
+        return [e for e in node.elts if _is_blockspec(e)]
+    return []
+
+
+def _spec_shape(spec: ast.Call) -> Optional[ast.expr]:
+    shape = _kwarg(spec, "block_shape")
+    if shape is None and spec.args:
+        shape = spec.args[0]
+    return shape if isinstance(shape, (ast.Tuple, ast.List)) else None
+
+
+def _spec_index_map(spec: ast.Call) -> Optional[ast.Lambda]:
+    im = _kwarg(spec, "index_map")
+    if im is None and len(spec.args) >= 2:
+        im = spec.args[1]
+    return im if isinstance(im, ast.Lambda) else None
+
+
+def _grid_arity(call: ast.Call, env: Dict[str, int]) -> Optional[int]:
+    grid = _kwarg(call, "grid")
+    if grid is None:
+        return None
+    if isinstance(grid, (ast.Tuple, ast.List)):
+        return len(grid.elts)
+    v = const_int(grid, env)
+    return 1 if v is not None else None
+
+
+class PallasChecker:
+    code_prefix = "RA5"
+    name = "pallas"
+
+    def check(self, src: SourceFile) -> List[Finding]:
+        out: List[Finding] = []
+        env = int_env(getattr(src.tree, "body", []))
+        kernel_names: Set[str] = {
+            fn.name for fn in walk_functions(src.tree)
+            if fn.name.endswith("_kernel")}
+
+        for fn in walk_functions(src.tree):
+            # function-local tile constants extend the module ones
+            local_env = dict(env)
+            local_env.update(int_env(fn.body))
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call) and _is_pallas_call(node):
+                    kernel_names.add(self._kernel_name(node))
+                    out += self._check_call(src, node, local_env)
+
+        out += self._check_accumulation(src, kernel_names, env)
+        return out
+
+    @staticmethod
+    def _kernel_name(call: ast.Call) -> str:
+        """Name of the kernel function handed to pallas_call (unwraps
+        functools.partial and local bindings by name only)."""
+        if not call.args:
+            return ""
+        k = call.args[0]
+        if isinstance(k, ast.Call) and _callee(k) == "partial" and k.args:
+            k = k.args[0]
+        return k.id if isinstance(k, ast.Name) else ""
+
+    # -- RA501 / RA502 ----------------------------------------------------
+    def _check_call(self, src: SourceFile, call: ast.Call,
+                    env: Dict[str, int]) -> List[Finding]:
+        out: List[Finding] = []
+        # grid_spec=pl.GridSpec(grid=..., in_specs=..., out_specs=...)
+        host = call
+        gs = _kwarg(call, "grid_spec")
+        if isinstance(gs, ast.Call) and _callee(gs) in ("GridSpec",
+                                                        "PrefetchScalarGridSpec"):
+            host = gs
+        arity = _grid_arity(host, env)
+        specs = []
+        for role in ("in_specs", "out_specs"):
+            for i, spec in enumerate(_specs(_kwarg(host, role))):
+                specs.append((role, i, spec))
+
+        out_shapes = self._out_shapes(call, env)
+
+        for role, i, spec in specs:
+            im = _spec_index_map(spec)
+            shape = _spec_shape(spec)
+            where = f"{role}[{i}]"
+            if im is not None and arity is not None:
+                n_params = len(im.args.posonlyargs) + len(im.args.args)
+                if im.args.vararg is None and n_params != arity:
+                    out.append(Finding(
+                        "RA501", src.path, spec.lineno, spec.col_offset,
+                        f"{where} index_map takes {n_params} parameter"
+                        f"{'s' if n_params != 1 else ''} but the grid "
+                        f"has {arity} ax{'es' if arity != 1 else 'is'}"))
+            if im is not None and shape is not None:
+                ret = im.body
+                ret_len = len(ret.elts) if isinstance(
+                    ret, (ast.Tuple, ast.List)) else 1
+                if ret_len != len(shape.elts):
+                    out.append(Finding(
+                        "RA502", src.path, spec.lineno, spec.col_offset,
+                        f"{where} block shape has {len(shape.elts)} "
+                        f"dims but index_map returns {ret_len} "
+                        f"coordinate{'s' if ret_len != 1 else ''}"))
+            # static divisibility against the matching out_shape
+            if role == "out_specs" and shape is not None \
+                    and i < len(out_shapes) and out_shapes[i] is not None:
+                arr = out_shapes[i]
+                if len(arr.elts) == len(shape.elts):
+                    for d, (b_e, a_e) in enumerate(
+                            zip(shape.elts, arr.elts)):
+                        b, a = const_int(b_e, env), const_int(a_e, env)
+                        if b and a and b > 0 and a % b:
+                            out.append(Finding(
+                                "RA502", src.path, spec.lineno,
+                                spec.col_offset,
+                                f"{where} block dim {d} is {b} but the "
+                                f"output array dim is {a} — blocks "
+                                f"must tile the array exactly"))
+        return out
+
+    @staticmethod
+    def _out_shapes(call: ast.Call, env: Dict[str, int]
+                    ) -> List[Optional[ast.expr]]:
+        """Shape tuples of the out_shape ShapeDtypeStructs (None where
+        unresolvable)."""
+        node = _kwarg(call, "out_shape")
+        if node is None:
+            return []
+        structs = node.elts if isinstance(node, (ast.List, ast.Tuple)) \
+            else [node]
+        shapes: List[Optional[ast.expr]] = []
+        for s in structs:
+            if isinstance(s, ast.Call) \
+                    and _callee(s) == "ShapeDtypeStruct" and s.args \
+                    and isinstance(s.args[0], (ast.Tuple, ast.List)):
+                shapes.append(s.args[0])
+            else:
+                shapes.append(None)
+        return shapes
+
+    # -- RA503 ------------------------------------------------------------
+    def _check_accumulation(self, src: SourceFile,
+                            kernel_names: Set[str],
+                            env: Dict[str, int]) -> List[Finding]:
+        out: List[Finding] = []
+        for fn in walk_functions(src.tree):
+            if fn.name not in kernel_names:
+                continue
+            ref_params = {a.arg for a in fn.args.args
+                          if a.arg.endswith("_ref")}
+            # one-hop local bindings: name -> RHS expression
+            bindings: Dict[str, ast.expr] = {}
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Assign) \
+                        and len(node.targets) == 1 \
+                        and isinstance(node.targets[0], ast.Name):
+                    bindings[node.targets[0].id] = node.value
+
+            def low_precision(expr: ast.AST, hop: int = 0) -> bool:
+                """Operand visibly at the input dtype: a raw *_ref read
+                (no astype(f32) on the path) or an explicit cast to
+                bf16/f16.  Unknown derivations are NOT flagged."""
+                for n in ast.walk(expr):
+                    if isinstance(n, ast.Call) \
+                            and isinstance(n.func, ast.Attribute) \
+                            and n.func.attr == "astype":
+                        parts = dotted_name(n.args[0]) if n.args else None
+                        if parts and parts[-1] in ("bfloat16", "float16"):
+                            return True
+                        # astype(float32) launders the whole expression
+                        if parts and parts[-1] in ("float32", "float64"):
+                            return False
+                for n in ast.walk(expr):
+                    if isinstance(n, ast.Subscript) \
+                            and isinstance(n.value, ast.Name) \
+                            and n.value.id in ref_params:
+                        return True
+                if isinstance(expr, ast.Name) and hop == 0 \
+                        and expr.id in bindings:
+                    return low_precision(bindings[expr.id], hop=1)
+                return False
+
+            for node in ast.walk(fn):
+                operands = None
+                if isinstance(node, ast.Call) \
+                        and _callee(node) in _DOT_CALLS:
+                    if _kwarg(node, "preferred_element_type") is not None:
+                        continue
+                    operands = [a for a in node.args
+                                if not (isinstance(a, ast.Constant)
+                                        and isinstance(a.value, str))]
+                    # dot_general's dimension_numbers tuple isn't data
+                    if _callee(node) == "dot_general":
+                        operands = operands[:2]
+                elif isinstance(node, ast.BinOp) \
+                        and isinstance(node.op, ast.MatMult):
+                    operands = [node.left, node.right]
+                if not operands:
+                    continue
+                if any(low_precision(op) for op in operands):
+                    out.append(Finding(
+                        "RA503", src.path, node.lineno, node.col_offset,
+                        f"matmul in kernel {fn.name!r} consumes a raw "
+                        f"input-dtype operand with no "
+                        f"preferred_element_type — on bf16 inputs the "
+                        f"MXU accumulates in bf16; cast with "
+                        f".astype(jnp.float32) or set "
+                        f"preferred_element_type=jnp.float32"))
+        return out

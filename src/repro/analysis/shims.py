@@ -1,0 +1,74 @@
+"""Static deprecation firewall (RA401, DESIGN.md §14).
+
+DESIGN.md §9 retired ten pre-``Fleet``/``Plan`` entry points as
+warn-once shims, and ``pytest.ini`` turns their DeprecationWarnings into
+tier-1 errors — but only on paths a test actually executes.  This
+checker enforces the same contract *statically*: no module under
+``src/repro/`` or ``benchmarks/`` may import or call a shim, whether or
+not any test reaches the line.
+
+Flagged forms (resolved through the file's import map):
+
+* ``from repro.core.scheduler import solve`` — the import itself;
+* ``scheduler.solve(...)`` / ``repro.core.cost_model.t_total(...)`` —
+  attribute calls landing in a shim module;
+* bare ``solve(...)`` after a flagged ``from``-import (reported once,
+  at the import).
+
+The modules that *define* the shims are exempt for their own
+definitions (a ``def`` is not a call); their internal delegation goes
+through the ``_``-prefixed canonical engines, so a hit inside them is
+still a real violation.  Tests are outside the lint scope on purpose:
+they assert on shim behaviour and stay free to call them.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from repro.analysis.base import Finding, Imports, SourceFile
+
+# module -> deprecated names (DESIGN.md §9's ten legacy entry points).
+SHIMS: Dict[str, Set[str]] = {
+    "repro.core.scheduler": {"solve", "solve_multi"},
+    "repro.core.cost_model": {"t_total", "t_total_batch",
+                              "t_total_multi", "t_total_multi_batch"},
+    "repro.core.simulator": {"simulate_iteration",
+                             "simulate_iteration_multi"},
+    "repro.train.loop": {"run_hier_loop", "run_multi_hier_loop"},
+}
+
+_REPLACEMENT = "repro.api.plan()/Fleet (see DESIGN.md §9)"
+
+
+def _is_shim(path: str) -> bool:
+    mod, _, attr = path.rpartition(".")
+    return attr in SHIMS.get(mod, set())
+
+
+class ShimFirewallChecker:
+    code_prefix = "RA4"
+    name = "shim-firewall"
+
+    def check(self, src: SourceFile) -> List[Finding]:
+        imports = Imports(src.tree)
+        out: List[Finding] = []
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.ImportFrom) and node.module \
+                    and node.level == 0:
+                for alias in node.names:
+                    if alias.name in SHIMS.get(node.module, set()):
+                        out.append(Finding(
+                            "RA401", src.path, node.lineno,
+                            node.col_offset,
+                            f"import of deprecated shim "
+                            f"{node.module}.{alias.name} — use "
+                            f"{_REPLACEMENT}"))
+            elif isinstance(node, ast.Call):
+                path = imports.resolve(node.func)
+                if path and _is_shim(path):
+                    out.append(Finding(
+                        "RA401", src.path, node.lineno, node.col_offset,
+                        f"call to deprecated shim {path} — use "
+                        f"{_REPLACEMENT}"))
+        return out

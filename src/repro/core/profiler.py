@@ -151,19 +151,21 @@ def measure_profile(model, rel_speed: Dict[str, float] | None = None,
     host_f = np.zeros(n)
     host_b = np.zeros(n)
     x, _ = stack.dummy_batch(key, batch)
+    # One-shot measurement probes: each cut's fwd/vjp is traced once,
+    # timed, then dropped — re-jit per iteration is the point, not a bug.
     for i in range(n):
         xi = x if i == 0 else _segment_input(stack, params, x, i)
-        fwd = jax.jit(lambda p, v, i=i: _seg_apply(stack, params, p, v, i))
+        fwd = jax.jit(lambda p, v, i=i: _seg_apply(stack, params, p, v, i))  # repro-lint: disable=RA101 one-shot timing probe, traced once per cut
         # Backward timing covers what a mid-stack worker computes: the
         # cotangent w.r.t. this cut's params AND its input activations.
         # Integer segment inputs (the LM embed cut's token ids) have no
         # tangent, so there the params cotangent is the whole backward.
         if jnp.issubdtype(xi.dtype, jnp.floating):
-            vjp = jax.jit(lambda p, v, i=i: jax.vjp(
+            vjp = jax.jit(lambda p, v, i=i: jax.vjp(  # repro-lint: disable=RA101 one-shot timing probe, traced once per cut
                 lambda pp, vv: _seg_sq(stack, params, pp, vv, i),
                 p, v)[1](1.0))
         else:
-            vjp = jax.jit(lambda p, v, i=i: jax.vjp(
+            vjp = jax.jit(lambda p, v, i=i: jax.vjp(  # repro-lint: disable=RA101 one-shot timing probe, traced once per cut
                 lambda pp: _seg_sq(stack, params, pp, v, i), p)[1](1.0))
         fwd(params[i], xi).block_until_ready()  # compile
         jax.block_until_ready(vjp(params[i], xi))
@@ -215,4 +217,5 @@ def _seg_sq(stack: LayerStack, params, p_i, x: jax.Array,
 
 def _segment_input(stack: LayerStack, params, x: jax.Array,
                    i: int) -> jax.Array:
+    # repro-lint: disable-next=RA102 runs once per cut to build the timing input
     return jax.jit(lambda p, v: stack.apply_segment(p, v, 0, i))(params, x)

@@ -78,7 +78,7 @@ def int8_leaf_bytes(shape) -> float:
     elems = float(np.prod(shape, dtype=np.float64))
     rows = float(np.prod(shape[:-1], dtype=np.float64)) \
         if len(shape) >= 2 else 1.0
-    return elems * 1.0 + SCALE_BYTES * rows
+    return elems * 1.0 + SCALE_BYTES * rows  # repro-lint: disable=RA301,RA302 int8 codec conversion point: exactly 1 byte per element
 
 
 def wire_act_bytes(meta, wire: str) -> float:

@@ -421,6 +421,7 @@ def hlo_block_flops(stack: LMLayerStack, cut: int, batch: int = 1) -> float:
     from repro.launch.hlo_analysis import loop_aware_cost
     params = stack.init(jax.random.PRNGKey(0))
     x, _ = stack.dummy_batch(jax.random.PRNGKey(1), batch)
+    # repro-lint: disable-next=RA102 one-shot HLO probe, compiled once per crosscheck
     xi = x if cut == 0 else jax.jit(
         lambda p, v: stack.apply_segment(p, v, 0, cut))(params, x)
     fn = jax.jit(lambda p, v: stack.apply_segment(p, v, cut, cut + 1))
